@@ -1,0 +1,83 @@
+"""Roofline table from the multi-pod dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs  / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes  / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+with HLO_FLOPs/bytes taken from the *unrolled cost program*'s
+cost_analysis() (per-device values x chips = global), collective bytes
+parsed per-device from its optimized HLO.  MODEL_FLOPS = 6*N*D (train,
+N=active params for MoE) or 2*N*D (inference) gives the usefulness ratio.
+"""
+
+import glob
+import json
+import os
+
+from repro import hw
+
+CHIP = hw.TPU_V5E
+
+
+def roofline_from_artifact(d):
+    chips = d["n_devices"]
+    flops_dev = d["cost"]["flops_per_device"]
+    bytes_dev = d["cost"]["bytes_accessed_per_device"]
+    coll_dev = d["collectives"]["total_bytes"]
+    compute_s = flops_dev / CHIP.peak_bf16_flops
+    memory_s = bytes_dev / CHIP.hbm_bw
+    collective_s = coll_dev / CHIP.ici_link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    n = d["active_params"] if d["kind"] == "train" else d["active_params"]
+    mult = 6.0 if d["kind"] == "train" else 2.0
+    model_flops = mult * n * d["tokens"]
+    hlo_global = flops_dev * chips
+    bound = max(compute_s, memory_s, collective_s)
+    ideal = (model_flops / chips) / CHIP.peak_bf16_flops
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": round(model_flops / max(hlo_global, 1), 3),
+        "roofline_fraction": round(ideal / max(bound, 1e-12), 4),
+        "peak_gib_per_dev": round(d["memory"]["peak_bytes_per_device"] / 2**30, 2),
+        "fits_hbm": d["memory"]["peak_bytes_per_device"] <= CHIP.hbm_bytes,
+    }
+
+
+def run(csv_rows, art_dir="artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            tag = f"{d['arch']}__{d['shape']}__{d.get('mesh', '?')}"
+            csv_rows.append((f"roofline_{tag}", 0.0,
+                             d.get("reason", d.get("error", "?"))[:100]))
+            continue
+        r = roofline_from_artifact(d)
+        rows.append(r)
+        csv_rows.append((
+            f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"compute_ms={r['compute_s'] * 1e3:.1f} "
+            f"memory_ms={r['memory_s'] * 1e3:.1f} "
+            f"collective_ms={r['collective_s'] * 1e3:.1f} "
+            f"dominant={r['dominant']} useful={r['useful_ratio']} "
+            f"roofline_frac={r['roofline_fraction']} "
+            f"gib/dev={r['peak_gib_per_dev']}"))
+    return csv_rows
+
+
+def table(art_dir="artifacts/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") == "ok":
+            out.append(roofline_from_artifact(d))
+    return out

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select suites with
+``python -m benchmarks.run [conv search_methods search_speed e2e roofline]``.
+"""
+
+import sys
+
+from benchmarks import (
+    bench_conv_operators,
+    bench_e2e,
+    bench_roofline,
+    bench_search_methods,
+    bench_search_speed,
+)
+
+SUITES = {
+    "conv": bench_conv_operators.run,          # Fig 2b
+    "search_methods": bench_search_methods.run,  # Fig 3a + Table 1
+    "search_speed": bench_search_speed.run,    # Fig 3b
+    "e2e": bench_e2e.run,                      # §3.4
+    "roofline": bench_roofline.run,            # deliverable (g)
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    rows = []
+    for name in wanted:
+        SUITES[name](rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

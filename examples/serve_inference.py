@@ -1,0 +1,82 @@
+"""End-to-end serving driver (the paper is an inference system).
+
+Boots a small qwen3-family LM, briefly trains it on the synthetic pipeline
+so decode produces the learnable next-token structure, then serves a queue
+of batched requests through the prefill/decode engine — the same
+`prefill_step`/`serve_step` programs the 512-chip dry-run compile-validates.
+
+Run:  PYTHONPATH=src python examples/serve_inference.py [--requests 12]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.launch.steps import TrainConfig, jit_train_step
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
+                                           vocab=211)
+    model = build_model(cfg)
+    mesh = single_device_mesh()
+    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        batch0 = data.batch(0)
+        specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch0.items()}
+        step = jit_train_step(
+            model, mesh, DEFAULT_RULES,
+            TrainConfig(opt=AdamWConfig(lr=3e-3, warmup_steps=5,
+                                        total_steps=args.train_steps)), specs)
+        for i in range(args.train_steps):
+            b = {k: jax.numpy.asarray(v) for k, v in data.batch(i).items()}
+            params, opt, m = step(params, opt, b)
+        print(f"warm-up train: final loss {float(m['loss']):.3f} "
+              f"({args.train_steps} steps)")
+
+    engine = ServeEngine(model, params, mesh, DEFAULT_RULES,
+                         ServeConfig(batch_size=4, max_seq=64,
+                                     max_new_tokens=args.new_tokens))
+    rng = np.random.default_rng(0)
+    correct = 0
+    prompts = []
+    for _ in range(args.requests):
+        start = int(rng.integers(0, cfg.vocab))
+        prompt = (start + 17 * np.arange(16)) % cfg.vocab  # pipeline's rule
+        prompts.append(prompt)
+        engine.submit(prompt)
+
+    t0 = time.perf_counter()
+    done = engine.run()
+    wall = time.perf_counter() - t0
+
+    for req, prompt in zip(done, prompts):
+        want = (prompt[-1] + 17 * (1 + np.arange(args.new_tokens))) % cfg.vocab
+        correct += int(np.array_equal(req.output, want))
+    print(f"served {len(done)} requests in {wall:.2f}s | "
+          f"decode throughput {engine.throughput():,.0f} tok/s | "
+          f"prefill {engine.stats['prefill_s']:.2f}s "
+          f"decode {engine.stats['decode_s']:.2f}s")
+    print(f"{correct}/{len(done)} requests continued the learned sequence exactly")
+
+
+if __name__ == "__main__":
+    main()

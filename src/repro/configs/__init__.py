@@ -1,0 +1,103 @@
+"""Architecture registry: 10 assigned archs + the paper's own ResNet-18.
+
+`get_config(name)` returns the exact published ModelConfig;
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of a benchmark cell (weak-type-correct, shardable, no allocation);
+`runnable(cfg, shape)` implements the documented skip matrix
+(long_500k -> sub-quadratic archs only).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.configs import (
+    granite_3_8b,
+    internlm2_20b,
+    mamba2_2_7b,
+    qwen2_moe_a2_7b,
+    qwen2_vl_2b,
+    qwen3_1_7b,
+    qwen3_moe_235b_a22b,
+    starcoder2_15b,
+    whisper_base,
+    zamba2_1_2b,
+)
+
+REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen2_vl_2b,
+        qwen3_1_7b,
+        internlm2_20b,
+        granite_3_8b,
+        starcoder2_15b,
+        qwen3_moe_235b_a22b,
+        qwen2_moe_a2_7b,
+        zamba2_1_2b,
+        mamba2_2_7b,
+        whisper_base,
+    )
+}
+
+ARCH_NAMES = list(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return REGISTRY[name]
+
+
+def runnable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("SKIP: pure full-attention arch — 512k-token cache/prefill is "
+                "not sub-quadratic (see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, for_loss: bool = True):
+    """ShapeDtypeStructs for the model-input batch of one cell."""
+    b = shape.global_batch
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        s = shape.seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if for_loss:
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), f32)
+        return batch
+
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), f32)
+        return batch
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    raise ValueError(shape.kind)
+
+
+__all__ = [
+    "REGISTRY", "ARCH_NAMES", "SHAPES", "ModelConfig", "ShapeSpec",
+    "get_config", "input_specs", "runnable",
+]

@@ -1,0 +1,46 @@
+"""WPK core: the paper's contribution as a composable JAX library.
+
+Typical usage (the paper's Figure 1a pipeline):
+
+    from repro.core import Graph, optimize_graph, select, Engine
+
+    g = build_graph(...)                      # model import
+    g_opt = optimize_graph(g)                 # §2.1 graph optimization
+    plan = select(g_opt, tuner=Tuner(...))    # §2.2-2.5 search + selection
+    engine = Engine(g_opt, plan, default_registry())
+    outputs = engine(*inputs)                 # runtime engine
+"""
+
+from repro.core.graph import Graph, Node, TensorSpec
+from repro.core.passes import optimize_graph
+from repro.core.schedules import OpDesc, TEMPLATES, templates_for
+from repro.core.costmodel import (
+    ModelFitness,
+    WallClockFitness,
+    pallas_time,
+    xla_time,
+    roofline_bound,
+)
+from repro.core.search import (
+    GeneticSearch,
+    RLSearch,
+    SearchCache,
+    SearchTask,
+    Tuner,
+    genetic_search,
+    random_search,
+    rl_search,
+)
+from repro.core.selection import select, op_desc_of
+from repro.core.plan import InferencePlan, OpChoice
+from repro.core.engine import Engine, default_registry
+
+__all__ = [
+    "Graph", "Node", "TensorSpec", "optimize_graph",
+    "OpDesc", "TEMPLATES", "templates_for",
+    "ModelFitness", "WallClockFitness", "pallas_time", "xla_time", "roofline_bound",
+    "GeneticSearch", "RLSearch", "SearchCache", "SearchTask", "Tuner",
+    "genetic_search", "random_search", "rl_search",
+    "select", "op_desc_of", "InferencePlan", "OpChoice",
+    "Engine", "default_registry",
+]

@@ -1,0 +1,215 @@
+"""Pure-jnp reference semantics for every graph op.
+
+This is simultaneously:
+  * the "vendor library" backend (the cuDNN analogue — XLA's own lowering),
+  * the oracle that every tuned Pallas backend is tested against,
+  * the evaluator used for constant folding.
+
+Every function takes (list-of-input-arrays, attrs-dict) -> output array, so
+the engine can dispatch uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _act(x, kind: str):
+    if kind in (None, "none", "identity", "dropout"):
+        return x
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+        "neg": lambda v: -v,
+        "exp": jnp.exp,
+    }[kind](x)
+
+
+def conv2d(inputs: List[jnp.ndarray], attrs: Dict[str, Any]) -> jnp.ndarray:
+    """2-D convolution.  attrs: stride, padding ('SAME'|'VALID'), layout
+    ('NCHW'|'NHWC').  Weights are (O, I, Kh, Kw) for NCHW and
+    (Kh, Kw, I, O) for NHWC."""
+    x, w = inputs[0], inputs[1]
+    layout = attrs.get("layout", "NCHW")
+    stride = attrs.get("stride", 1)
+    strides = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    padding = attrs.get("padding", "SAME")
+    if layout == "NCHW":
+        dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
+    else:
+        dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    out = jax.lax.conv_general_dilated(x, w, strides, padding, dimension_numbers=dn)
+    if len(inputs) > 2:  # fused bias
+        b = inputs[2]
+        out = out + (b.reshape(1, -1, 1, 1) if layout == "NCHW" else b.reshape(1, 1, 1, -1))
+    return _act(out, attrs.get("activation"))
+
+
+def matmul(inputs: List[jnp.ndarray], attrs: Dict[str, Any]) -> jnp.ndarray:
+    x, w = inputs[0], inputs[1]
+    out = jnp.matmul(x, w, preferred_element_type=attrs.get("accum_dtype", jnp.float32))
+    out = out.astype(x.dtype)
+    if len(inputs) > 2:
+        out = out + inputs[2]
+    return _act(out, attrs.get("activation"))
+
+
+def attention(inputs: List[jnp.ndarray], attrs: Dict[str, Any]) -> jnp.ndarray:
+    q, k, v = inputs[0], inputs[1], inputs[2]
+    causal = attrs.get("causal", True)
+    scale = attrs.get("scale") or (1.0 / np.sqrt(q.shape[-1]))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qlen, klen = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((qlen, klen), bool), k=klen - qlen)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def bias_add(inputs, attrs):
+    x, b = inputs
+    if x.ndim == 4 and attrs.get("layout", "NCHW") == "NCHW":
+        return x + b.reshape(1, -1, 1, 1)
+    return x + b
+
+
+def batch_norm(inputs, attrs):
+    """Inference batch norm: pre-folded scale/shift per channel."""
+    x, scale, shift = inputs
+    layout = attrs.get("layout", "NCHW")
+    if x.ndim == 4 and layout == "NCHW":
+        return x * scale.reshape(1, -1, 1, 1) + shift.reshape(1, -1, 1, 1)
+    return x * scale + shift
+
+
+def layer_norm(inputs, attrs):
+    x = inputs[0]
+    eps = attrs.get("eps", 1e-5)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if len(inputs) > 1:
+        y = y * inputs[1]
+    if len(inputs) > 2:
+        y = y + inputs[2]
+    return y
+
+
+def softmax(inputs, attrs):
+    return jax.nn.softmax(inputs[0], axis=attrs.get("axis", -1))
+
+
+def _pool(x, attrs, reducer, init):
+    layout = attrs.get("layout", "NCHW")
+    k = attrs.get("kernel", 2)
+    s = attrs.get("stride", k)
+    pad = attrs.get("padding", "VALID")
+    if layout == "NCHW":
+        dims, strides = (1, 1, k, k), (1, 1, s, s)
+    else:
+        dims, strides = (1, k, k, 1), (1, s, s, 1)
+    return jax.lax.reduce_window(x, init, reducer, dims, strides, pad)
+
+
+def max_pool(inputs, attrs):
+    return _pool(inputs[0], attrs, jax.lax.max, -jnp.inf)
+
+
+def avg_pool(inputs, attrs):
+    k = attrs.get("kernel", 2)
+    return _pool(inputs[0], attrs, jax.lax.add, 0.0) / (k * k)
+
+
+def global_avg_pool(inputs, attrs):
+    x = inputs[0]
+    axes = (2, 3) if attrs.get("layout", "NCHW") == "NCHW" else (1, 2)
+    return jnp.mean(x, axis=axes)
+
+
+def reshape(inputs, attrs):
+    return jnp.reshape(inputs[0], attrs["shape"])
+
+
+def transpose(inputs, attrs):
+    return jnp.transpose(inputs[0], attrs["perm"])
+
+
+def flatten(inputs, attrs):
+    x = inputs[0]
+    return x.reshape(x.shape[0], -1)
+
+
+def concat(inputs, attrs):
+    return jnp.concatenate(inputs, axis=attrs.get("axis", -1))
+
+
+def fused_elementwise(inputs, attrs):
+    """A chain of elementwise ops produced by the fusion pass.
+
+    attrs['chain'] is a list of {op, const_inputs} stages; stage i consumes the
+    running value plus any extra inputs (taken in order from `inputs[1:]`).
+    """
+    x = inputs[0]
+    extra = list(inputs[1:])
+    for stage in attrs["chain"]:
+        op = stage["op"]
+        if op in ("add", "mul", "sub", "div"):
+            rhs = extra.pop(0)
+            x = {"add": jnp.add, "mul": jnp.multiply, "sub": jnp.subtract, "div": jnp.divide}[op](x, rhs)
+        else:
+            x = _act(x, op)
+    return x
+
+
+def _unary(kind):
+    return lambda inputs, attrs: _act(inputs[0], kind)
+
+
+def _binary(fn):
+    return lambda inputs, attrs: fn(inputs[0], inputs[1])
+
+
+REF_OPS = {
+    "conv2d": conv2d,
+    "fused_conv2d": conv2d,
+    "matmul": matmul,
+    "fused_matmul": matmul,
+    "attention": attention,
+    "bias_add": bias_add,
+    "batch_norm": batch_norm,
+    "layer_norm": layer_norm,
+    "softmax": softmax,
+    "max_pool": max_pool,
+    "avg_pool": avg_pool,
+    "global_avg_pool": global_avg_pool,
+    "reshape": reshape,
+    "transpose": transpose,
+    "flatten": flatten,
+    "concat": concat,
+    "fused_elementwise": fused_elementwise,
+    "add": _binary(jnp.add),
+    "mul": _binary(jnp.multiply),
+    "sub": _binary(jnp.subtract),
+    "div": _binary(jnp.divide),
+    "relu": _unary("relu"),
+    "gelu": _unary("gelu"),
+    "silu": _unary("silu"),
+    "tanh": _unary("tanh"),
+    "sigmoid": _unary("sigmoid"),
+    "identity": _unary("identity"),
+    "dropout": _unary("dropout"),
+    "neg": _unary("neg"),
+    "exp": _unary("exp"),
+}
+
+
+def run_op(op: str, inputs, attrs):
+    return REF_OPS[op](inputs, attrs)

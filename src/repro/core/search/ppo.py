@@ -1,0 +1,193 @@
+"""Pure-JAX PPO, matching the paper's §2.4 description.
+
+Policy network (verbatim from the paper): four fully-connected layers with
+hidden sizes 512, 1024, 1024, 512 and activations tanh, tanh, selu, selu,
+followed by a dropout layer with keep probability 15%, and a final linear FC
+layer.  The output feeds a multinomial (categorical) distribution over the
+discrete action space.  The value function V(s) is a separate small MLP.
+
+Loss (Eq. 7):  L_t = E[ L_clip - c1 * L_VF + c2 * S[pi] ],  c1 = 0.15,
+c2 = 20 (paper's values), maximised by Adam ascent (we minimise -L).
+Advantages use the generalized advantage estimator (Eq. 5-6).
+
+RLlib is replaced by this ~200-line implementation because the stack here is
+JAX-only; the algorithmic content (clipped surrogate, GAE, minibatch epochs)
+is identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+POLICY_WIDTHS = (512, 1024, 1024, 512)
+POLICY_ACTS = ("tanh", "tanh", "selu", "selu")
+DROPOUT_KEEP = 0.15
+VALUE_WIDTHS = (256, 256)
+
+
+def _act(x, kind):
+    return {"tanh": jnp.tanh, "selu": jax.nn.selu}[kind](x)
+
+
+def _init_mlp(rng, sizes):
+    params = []
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros(fan_out)})
+    return params
+
+
+def init_params(rng, obs_dim: int, n_actions: int):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "policy": _init_mlp(k1, (obs_dim,) + POLICY_WIDTHS + (n_actions,)),
+        "value": _init_mlp(k2, (obs_dim,) + VALUE_WIDTHS + (1,)),
+    }
+
+
+def policy_logits(params, obs, *, dropout_rng=None):
+    x = obs
+    layers = params["policy"]
+    for i, layer in enumerate(layers[:-1]):
+        x = _act(x @ layer["w"] + layer["b"], POLICY_ACTS[i])
+    if dropout_rng is not None:  # train-time dropout, keep prob 15% (paper)
+        mask = jax.random.bernoulli(dropout_rng, DROPOUT_KEEP, x.shape)
+        x = jnp.where(mask, x / DROPOUT_KEEP, 0.0)
+    last = layers[-1]
+    return x @ last["w"] + last["b"]
+
+
+def value_fn(params, obs):
+    x = obs
+    for layer in params["value"][:-1]:
+        x = jnp.tanh(x @ layer["w"] + layer["b"])
+    last = params["value"][-1]
+    return (x @ last["w"] + last["b"])[..., 0]
+
+
+class Batch(NamedTuple):
+    obs: jnp.ndarray       # (T, obs_dim)
+    actions: jnp.ndarray   # (T,)
+    logp_old: jnp.ndarray  # (T,)
+    advantages: jnp.ndarray
+    returns: jnp.ndarray
+
+
+def gae(rewards: np.ndarray, values: np.ndarray, gamma: float, lam: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Eq. 5-6: delta_t = r_t + gamma*V(s_{t+1}) - V(s_t);
+    A_t = sum (gamma*lam)^l delta_{t+l}.  `values` has length T+1."""
+    T = len(rewards)
+    adv = np.zeros(T, np.float32)
+    acc = 0.0
+    for t in reversed(range(T)):
+        delta = rewards[t] + gamma * values[t + 1] - values[t]
+        acc = delta + gamma * lam * acc
+        adv[t] = acc
+    returns = adv + values[:-1]
+    return adv, returns
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    clip_eps: float = 0.2
+    c1: float = 0.15      # value-loss coefficient (paper)
+    c2: float = 20.0      # entropy coefficient (paper)
+    gamma: float = 0.99
+    lam: float = 0.95     # the paper's mu
+    lr: float = 3e-4
+    epochs: int = 4
+    minibatch: int = 64
+
+
+def ppo_loss(params, batch: Batch, cfg: PPOConfig, dropout_rng):
+    logits = policy_logits(params, batch.obs, dropout_rng=dropout_rng)
+    logp_all = jax.nn.log_softmax(logits, -1)
+    logp = jnp.take_along_axis(logp_all, batch.actions[:, None], -1)[:, 0]
+    ratio = jnp.exp(logp - batch.logp_old)
+    adv = batch.advantages
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    l_clip = jnp.minimum(
+        ratio * adv, jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    ).mean()
+    v = value_fn(params, batch.obs)
+    l_vf = jnp.mean((v - batch.returns) ** 2)
+    entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, -1).mean()
+    # Eq. 7 (maximised) -> minimise the negation.
+    return -(l_clip - cfg.c1 * l_vf + cfg.c2 * 1e-3 * entropy)
+
+
+# ---- minimal Adam (self-contained so core.search has no deps on repro.optim)
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree.map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def make_update_step(cfg: PPOConfig):
+    @jax.jit
+    def step(params, opt_state, batch: Batch, rng):
+        loss, grads = jax.value_and_grad(ppo_loss)(params, batch, cfg, rng)
+        params, opt_state = adam_update(params, grads, opt_state, cfg.lr)
+        return params, opt_state, loss
+
+    return step
+
+
+class PPOAgent:
+    """Thin stateful wrapper used by the RL-search driver."""
+
+    def __init__(self, obs_dim: int, n_actions: int, cfg: PPOConfig = PPOConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.n_actions = n_actions
+        self.rng = jax.random.PRNGKey(seed)
+        self.rng, k = jax.random.split(self.rng)
+        self.params = init_params(k, obs_dim, n_actions)
+        self.opt_state = adam_init(self.params)
+        self._update = make_update_step(cfg)
+        self._logits = jax.jit(lambda p, o: policy_logits(p, o))
+        self._value = jax.jit(value_fn)
+
+    def act(self, obs: np.ndarray) -> Tuple[int, float]:
+        self.rng, k = jax.random.split(self.rng)
+        logits = self._logits(self.params, jnp.asarray(obs)[None])[0]
+        a = int(jax.random.categorical(k, logits))
+        logp = float(jax.nn.log_softmax(logits)[a])
+        return a, logp
+
+    def values(self, obs: np.ndarray) -> np.ndarray:
+        return np.asarray(self._value(self.params, jnp.asarray(obs)))
+
+    def update(self, obs, actions, logp_old, rewards, last_obs) -> float:
+        obs = np.asarray(obs, np.float32)
+        values = self.values(np.concatenate([obs, np.asarray(last_obs, np.float32)[None]], 0))
+        adv, rets = gae(np.asarray(rewards, np.float32), values, self.cfg.gamma, self.cfg.lam)
+        batch_np = Batch(obs, np.asarray(actions, np.int32),
+                         np.asarray(logp_old, np.float32), adv, rets)
+        T = len(actions)
+        losses = []
+        for _ in range(self.cfg.epochs):
+            self.rng, kperm, kdrop = jax.random.split(self.rng, 3)
+            perm = np.asarray(jax.random.permutation(kperm, T))
+            for s in range(0, T, self.cfg.minibatch):
+                idx = perm[s : s + self.cfg.minibatch]
+                mb = Batch(*(jnp.asarray(x[idx]) for x in batch_np))
+                self.params, self.opt_state, loss = self._update(
+                    self.params, self.opt_state, mb, kdrop
+                )
+                losses.append(float(loss))
+        return float(np.mean(losses)) if losses else 0.0

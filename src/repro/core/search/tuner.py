@@ -1,0 +1,81 @@
+"""Tuner: orchestrates the searches for one operator.
+
+Mirrors the paper's end-to-end usage (§3): "given an operator, we used both
+genetic search and RL-search to identify optimal code generation
+configurations and single out the best for use", with the §3.3 cache checked
+first.  Multi-threaded candidate evaluation is supported the way the paper
+uses multi-threading for compilation (useful with WallClockFitness; the
+analytical fitness is too cheap to benefit).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro import hw
+from repro.core.costmodel import Fitness, ModelFitness
+from repro.core.schedules import OpDesc, Template, templates_for
+from repro.core.search.base import SearchResult, SearchTask
+from repro.core.search.cache import SearchCache
+from repro.core.search.genetic import GeneticSearch
+from repro.core.search.random_search import random_search
+from repro.core.search.rl_search import RLSearch
+
+
+class Tuner:
+    def __init__(
+        self,
+        chip: hw.Chip = hw.TPU_V5E,
+        fitness: Optional[Fitness] = None,
+        cache: Optional[SearchCache] = None,
+        methods: Sequence[str] = ("genetic", "rl"),
+        genetic: Optional[GeneticSearch] = None,
+        rl: Optional[RLSearch] = None,
+        random_budget: int = 64,
+        seed: int = 0,
+    ):
+        self.chip = chip
+        self.fitness = fitness
+        self.cache = cache if cache is not None else SearchCache()
+        self.methods = tuple(methods)
+        self.genetic = genetic or GeneticSearch()
+        self.rl = rl or RLSearch(seed=seed)
+        self.random_budget = random_budget
+        self.seed = seed
+        self.log: List[SearchResult] = []
+
+    def _make_task(self, op: OpDesc, template: Template) -> SearchTask:
+        fitness = self.fitness or ModelFitness(self.chip)
+        return SearchTask(op, template, fitness, self.chip, seed=self.seed)
+
+    def tune(self, op: OpDesc, template: Optional[Template] = None,
+             use_cache: bool = True) -> SearchResult:
+        """Best configuration for `op` under `template` (default: the
+        kind-appropriate template)."""
+        template = template or templates_for(op)[0]
+
+        if use_cache:
+            hit = self.cache.get(self.chip.name, op, template.name)
+            if hit is not None:
+                return SearchResult(op, template.name, hit["config"],
+                                    hit["runtime_s"], 0, 0.0,
+                                    hit["method"] + "+cache")
+
+        results: List[SearchResult] = []
+        for method in self.methods:
+            task = self._make_task(op, template)
+            if method == "genetic":
+                results.append(self.genetic.run(task))
+            elif method == "rl":
+                results.append(self.rl.run(task))
+            elif method == "random":
+                results.append(random_search(task, self.random_budget))
+            else:
+                raise ValueError(method)
+
+        best = min(results, key=lambda r: r.runtime_s)
+        self.log.extend(results)
+        self.cache.put(self.chip.name, op, template.name,
+                       best.config, best.runtime_s, best.method)
+        return best

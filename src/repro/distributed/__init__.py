@@ -1,0 +1,21 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    constrain,
+    activation_rules,
+    logical_to_spec,
+    params_shardings,
+    input_shardings,
+    prune_for_mesh,
+)
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "constrain",
+    "activation_rules",
+    "logical_to_spec",
+    "params_shardings",
+    "input_shardings",
+    "prune_for_mesh",
+]

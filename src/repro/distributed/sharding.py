@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP / pod).
+
+Model code never names mesh axes.  It names *logical* axes ("batch",
+"heads", "ffn", "experts", "vocab", "seq", "embed", ...), and a
+`ShardingRules` table maps logical axes to physical mesh axes.  The same
+model runs on a laptop (rules=None → every constraint is a no-op), a single
+16×16 pod, or the 2×16×16 multi-pod mesh — only the rules change.
+
+Physical axes:
+  pod    pod-level data parallelism (gradients cross the DCN)
+  data   in-pod data parallelism / ZeRO-1 shard axis / sequence parallelism
+  model  tensor parallelism (heads, ffn, vocab) and expert parallelism
+
+The rules are deliberately centralised: the §Perf hillclimb iterates by
+editing *this table* (or passing an override), re-lowering, and re-reading
+the roofline — the sharding scheme is a first-class tunable of the system,
+in the same spirit as the paper's per-operator schedule search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> physical mesh axis (or tuple of axes, or None)."""
+
+    rules: Tuple[Tuple[str, object], ...] = (
+        ("batch", ("pod", "data")),   # DP over pod+data
+        ("seq", None),                # sequence replicated by default
+        ("seq_sharded", "data"),      # SP: long-context activations
+        ("embed", None),              # residual stream replicated
+        ("heads", "model"),           # TP over attention heads
+        ("kv_heads", "model"),
+        ("ffn", "model"),             # TP over FFN hidden
+        ("experts", "model"),         # EP
+        ("vocab", "model"),           # TP over vocab
+        ("ssm_heads", "model"),       # TP over mamba heads
+        ("conv_dim", "model"),
+        ("layers", None),
+        ("expert_cap", None),
+        ("expert_ffn", None),         # TP inside experts when EP indivisible
+        ("embed_vec", None),          # lm_head d_model dim (fallback TP
+                                      # target when vocab is indivisible)
+        ("embed_tbl", None),          # embed-table d_model dim: NEVER model-
+                                      # sharded (SPMD gather on a dim-1-
+                                      # sharded table fails the partitioner)
+        ("moe_tokens", None),         # MoE (B, S*k, d) combine/dispatch token
+                                      # dim; -> 'model' turns the EP combine
+                                      # all-reduce into all-to-all resharding
+        ("kv_seq", None),             # KV-cache sequence dim (SP on long ctx)
+        ("ssm_state", None),          # mamba state dim (sharded on long ctx)
+        ("zero", "data"),             # ZeRO-1 optimizer-state shard axis
+    )
+
+    def lookup(self, name: Optional[str]):
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        raise KeyError(f"unknown logical axis {name!r}")
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        return P(*[self.lookup(a) for a in logical])
+
+    def replace(self, **kw) -> "ShardingRules":
+        table = dict(self.rules)
+        table.update(kw)
+        return ShardingRules(tuple(table.items()))
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def prune_for_mesh(rules: ShardingRules, mesh: Mesh) -> ShardingRules:
+    """Drop physical axes the mesh doesn't have (e.g. 'pod' on one pod)."""
+    present = set(mesh.shape.keys())
+
+    def prune(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in present else None
+        kept = tuple(a for a in v if a in present)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    return ShardingRules(tuple((k, prune(v)) for k, v in rules.rules))
+
+_tls = threading.local()
+
+
+def activation_rules(rules: Optional[ShardingRules]):
+    """Context manager installing the rules `constrain` uses inside jit."""
+    class _Ctx:
+        def __enter__(self):
+            self.prev = getattr(_tls, "rules", None)
+            _tls.rules = rules
+            return rules
+
+        def __exit__(self, *exc):
+            _tls.rules = self.prev
+
+    return _Ctx()
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint against the active rules (no-op outside)."""
+    rules = getattr(_tls, "rules", None)
+    if rules is None:
+        return x
+    spec = rules.spec(list(logical) + [None] * (x.ndim - len(logical)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def logical_to_spec(rules: ShardingRules, logical: Sequence[Optional[str]]) -> P:
+    return rules.spec(logical)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: every model publishes a pytree of logical-axis tuples
+# matching its params pytree ("param_logical_axes").  These helpers turn it
+# into NamedShardings for pjit in_shardings / checkpoint resharding.
+# ---------------------------------------------------------------------------
+
+def params_shardings(mesh: Mesh, rules: ShardingRules, logical_tree):
+    def to_sharding(logical):
+        return NamedSharding(mesh, rules.spec(logical))
+
+    return jax.tree.map(
+        to_sharding, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def input_shardings(mesh: Mesh, rules: ShardingRules, logical_tree):
+    return params_shardings(mesh, rules, logical_tree)

@@ -1,0 +1,205 @@
+"""Tuned Pallas TPU flash attention (prefill + decode).
+
+Online-softmax attention with VMEM-resident running max/denominator/output
+accumulator — no B·H·Sq·Skv logits tensor ever touches HBM (the XLA
+"vendor" lowering materialises it; that is exactly the gap WPK's backend
+selection exploits for long sequences).
+
+Schedule knobs (from `AttentionTemplate`): block_q, block_kv.  The grid is
+(B·H, Sq/block_q, Skv/block_kv) with the KV axis innermost ('arbitrary');
+causal masking skips fully-masked KV blocks via `pl.when` so the causal
+prefill does ~half the work.
+
+GQA is handled by the wrapper (`ops.attention`): the KV head index map
+divides by the group size — KV blocks are *shared* across the query heads of
+a group, not materialised per head.
+
+The decode variant (single query token against a long cache) uses the same
+online softmax with block_q folded away and a `length` scalar masking the
+unwritten cache tail.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _scratch(shape, dtype=jnp.float32):
+    if pltpu is not None:
+        return pltpu.VMEM(shape, dtype)
+    return pl.MemoryRef(shape, dtype)  # pragma: no cover
+
+
+# ---------------------------------------------------------------- prefill
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kt: int, block_q: int, block_kv: int, scale: float,
+                  causal: bool, out_dtype):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bkv, d)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip KV blocks entirely above the diagonal.
+        @pl.when(ki * block_kv <= qi * block_q + block_q - 1)
+        def _():
+            _body()
+    else:
+        _body()
+
+    @pl.when(ki == kt - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_attention_padded(
+    q: jnp.ndarray,   # (BH, Sq, D)  — Sq % block_q == 0
+    k: jnp.ndarray,   # (BHkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    block_q: int = 512,
+    block_kv: int = 512,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_per_kv: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    qt, kt = sq // block_q, skv // block_kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, kt=kt, block_q=block_q, block_kv=block_kv,
+        scale=scale, causal=causal, out_dtype=q.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, qt, kt),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, q_per_kv=q_per_kv: (b // q_per_kv, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, q_per_kv=q_per_kv: (b // q_per_kv, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _scratch((block_q, 1)),
+            _scratch((block_q, 1)),
+            _scratch((block_q, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------- decode
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, kt: int, block_kv: int, scale: float, out_dtype):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+
+    @pl.when(ki * block_kv < length)
+    def _body():
+        q = q_ref[0]                                   # (H, D)
+        k = k_ref[0]                                   # (bkv, D)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (H, bkv)
+        kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kt - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_decode_padded(
+    q: jnp.ndarray,        # (B, H, D) single new token per sequence
+    k: jnp.ndarray,        # (B, Skv, D) one KV head's cache (GQA grouped out)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) int32 valid cache lengths
+    *,
+    block_kv: int = 512,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, skv, _ = k.shape
+    kt = skv // block_kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_decode_kernel, kt=kt, block_kv=block_kv,
+                               scale=scale, out_dtype=q.dtype)
+    lengths2d = lengths.astype(jnp.int32).reshape(b, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kt),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, j: (bb, 0)),
+            pl.BlockSpec((1, h, d), lambda bb, j: (bb, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bb, j: (bb, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bb, j: (bb, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bb, j: (bb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            _scratch((h, 1)),
+            _scratch((h, 1)),
+            _scratch((h, d)),
+        ],
+        interpret=interpret,
+    )(lengths2d, q, k, v)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Every kernel in this package is tested shape/dtype-swept against these
+functions with `assert_allclose`.  They are deliberately written in the most
+obvious way possible — no cleverness, no blocking — so that a mismatch
+always indicts the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def apply_activation(x: jnp.ndarray, activation: Optional[str]) -> jnp.ndarray:
+    if activation in (None, "none", "identity"):
+        return x
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+    }[activation](x)
+
+
+def matmul_ref(x, w, bias=None, activation=None, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return apply_activation(out, activation).astype(out_dtype)
+
+
+def conv2d_ref(x, w, bias=None, stride=1, padding="SAME", activation=None):
+    """NHWC x (Kh,Kw,Cin,Cout) -> NHWC."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=dn,
+        preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return apply_activation(out, activation).astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal=True, scale=None):
+    """(B, Sq, H, D) x (B, Skv, Hkv, D) -> (B, Sq, H, D), GQA-aware."""
+    h, hkv = q.shape[2], k.shape[2]
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attention_decode_ref(q, k, v, lengths=None, scale=None):
+    """Single-token decode: q (B, H, D) against cache k/v (B, S, Hkv, D).
+    `lengths` (B,) masks cache positions >= length."""
+    h, hkv = q.shape[1], k.shape[1 + 1]
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    logits = jnp.einsum("bhd,bkhd->bhk", q, k).astype(jnp.float32) * scale
+    if lengths is not None:
+        pos = jnp.arange(k.shape[1])[None, None, :]
+        logits = jnp.where(pos < lengths[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhk,bkhd->bhd", p, v)
+
+
+def fused_elementwise_ref(x, chain, extras=()):
+    """Chain of elementwise stages; binary stages pop from `extras`."""
+    extras = list(extras)
+    for stage in chain:
+        op = stage["op"] if isinstance(stage, dict) else stage
+        if op in ("add", "mul", "sub", "div"):
+            rhs = extras.pop(0)
+            x = {"add": jnp.add, "mul": jnp.multiply,
+                 "sub": jnp.subtract, "div": jnp.divide}[op](x, rhs)
+        else:
+            x = apply_activation(x, op)
+    return x

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod) out
+     of 512 forced host devices,
+  2. lowers the real train_step / prefill_step / serve_step with the
+     baseline sharding rules (`rules_for_shape`),
+  3. compiles it — sharding mismatches, un-partitionable ops and
+     compile-time OOMs fail HERE, which is the point,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the optimized HLO) into a JSON artifact for the roofline
+     analysis (benchmarks/bench_roofline.py + EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, input_specs, runnable, REGISTRY
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    TrainConfig,
+    jit_prefill_step,
+    jit_serve_step,
+    jit_train_step,
+    make_state_shardings,
+    cache_shardings,
+    rules_for_shape,
+)
+from repro.models import build_model
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-collective operand bytes (per-device shapes in partitioned HLO).
+
+    For each collective instruction we sum its *operand* tensor sizes (the
+    bytes placed on the wire by this device); `x chips` gives the global
+    wire bytes used in the roofline's collective term.
+    """
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT )?%?[\w.\-]+ = ", s)
+        if not m:
+            continue
+        kind = None
+        rest = s[m.end():]
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rest):
+                kind = k
+                break
+        if kind is None or f"{kind}-done(" in rest:
+            continue  # -done carries no new bytes
+        paren = rest.find("(")
+        shapes = _SHAPE_RE.findall(rest[paren:])
+        operand_bytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        if operand_bytes == 0:  # operands printed without types: use result
+            shapes = _SHAPE_RE.findall(rest[:paren])
+            operand_bytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        per_kind[kind] += operand_bytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"per_kind_bytes": per_kind, "counts": counts, "total_bytes": total}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               train_cfg: Optional[TrainConfig] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = runnable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skip", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if os.environ.get("REPRO_LAYERS"):
+        # reduced-layer lowering for per-layer cost extrapolation on cells
+        # whose full unrolled cost program is compile-time prohibitive
+        cfg = dataclasses.replace(cfg, n_layers=int(os.environ["REPRO_LAYERS"]))
+    if os.environ.get("REPRO_CAPF"):
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(os.environ["REPRO_CAPF"]))
+    if shape.kind == "train":
+        # baseline activation-checkpoint policy for training lowerings:
+        # 'full' = save only layer inputs, recompute the block in backward
+        # (the §Perf hillclimb compares 'dots'/'none' per cell).
+        cfg = dataclasses.replace(cfg, remat=os.environ.get("REPRO_REMAT", "full"))
+    model = build_model(cfg)
+    rules = rules_for_shape(cfg, shape, mesh)
+    # §Perf hillclimb hook: REPRO_RULES="kv_seq=model,ffn=,heads=data" etc.
+    overrides = os.environ.get("REPRO_RULES", "")
+    if overrides:
+        kv = {}
+        for item in overrides.split(","):
+            k, _, v = item.partition("=")
+            v = v.strip()
+            kv[k.strip()] = tuple(v.split("+")) if "+" in v else (v or None)
+        rules = rules.replace(**kv)
+    train_cfg = train_cfg or TrainConfig(
+        microbatches=int(os.environ.get("REPRO_MICROBATCHES", "4")),
+        zero1=True)
+    do_cost = os.environ.get("REPRO_COST_PROGRAM", "1") == "1"
+    t0 = time.perf_counter()
+
+    def _lower(cost_program: bool):
+        from repro.models import runmode
+        with runmode.cost_mode(cost_program):
+            if shape.kind == "train":
+                from repro.optim import adamw_init
+                opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+                tc = (dataclasses.replace(train_cfg, microbatches=1)
+                      if cost_program else train_cfg)
+                fn = jit_train_step(model, mesh, rules, tc, batch_specs)
+                return fn.lower(params_shapes, opt_shapes, batch_specs)
+            if shape.kind == "prefill":
+                fn = jit_prefill_step(model, mesh, rules, batch_specs,
+                                      max_seq=shape.seq_len,
+                                      batch=shape.global_batch)
+                return fn.lower(params_shapes, batch_specs)
+            b = shape.global_batch
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(b, shape.seq_len))
+            fn = jit_serve_step(model, mesh, rules, b, shape.seq_len)
+            tok = jax.ShapeDtypeStruct((b, 1), np.int32)
+            return fn.lower(params_shapes, cache_shapes, tok)
+
+    with mesh:
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        batch_specs = input_specs(cfg, shape)
+
+        # ---- deploy program: compile proof + memory analysis
+        lowered = _lower(cost_program=False)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+
+        # ---- cost program: unrolled scans so cost_analysis counts every
+        # layer; direct attention/loss so chunk scans don't hide FLOPs.
+        t0 = time.perf_counter()
+        cost_meta = {"method": "unrolled"}
+        if do_cost:
+            try:
+                cost_compiled = _lower(cost_program=True).compile()
+                cost = cost_compiled.cost_analysis()
+                coll = collective_bytes(cost_compiled.as_text())
+                del cost_compiled
+            except Exception as e:  # fall back to the scanned program
+                cost_meta = {"method": f"scanned-fallback ({e})"}
+                cost = compiled.cost_analysis()
+                coll = collective_bytes(compiled.as_text())
+        else:
+            cost_meta = {"method": "scanned"}
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+        t_cost = time.perf_counter() - t0
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_program_s": round(t_cost, 2),
+        "cost_method": cost_meta["method"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "cost": {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": (shape.global_batch * shape.seq_len
+                   if shape.kind != "decode" else shape.global_batch),
+        "kind": shape.kind,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(REGISTRY) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = list(REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        tag = f"{arch}__{shape}__{mesh_name}"
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[cached] {tag}")
+            continue
+        print(f"[lower+compile] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, mp)
+        except Exception as e:
+            failures += 1
+            res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  ERROR: {e}")
+            if not args.continue_on_error:
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                raise
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res["status"] == "ok":
+            print(f"  ok: compile {res['compile_s']}s, "
+                  f"{res['cost']['flops_per_device']:.3e} flops/dev, "
+                  f"{res['memory']['peak_bytes_per_device'] / 2**30:.2f} GiB/dev, "
+                  f"{res['collectives']['total_bytes'] / 2**20:.1f} MiB collectives/dev")
+        elif res["status"] == "skip":
+            print(f"  {res['reason']}")
+    print(f"done; {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

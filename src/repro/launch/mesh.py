@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+`make_production_mesh` is a FUNCTION (not module state) so importing this
+module never touches jax device state; `dryrun.py` sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use.
+
+Mesh axes:
+  pod    — crosses the data-centre network (DCN); only DP gradient
+           reductions ride it.
+  data   — in-pod data parallel / ZeRO-1 / sequence parallel.
+  model  — in-pod tensor/expert parallel; all TP collectives stay on ICI.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
+    """General mesh helper for tests/examples (e.g. (2, 2) on 4 host devs)."""
+    if axes is None:
+        axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1

@@ -1,0 +1,275 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+These are what `dryrun.py` lowers for every (arch × shape × mesh) cell and
+what the trainer/server run for real.  Everything sharding-related funnels
+through `ShardingRules`, so a hillclimb iteration = new rules + re-lower.
+
+Distributed-optimization features:
+  * microbatched gradient accumulation (`microbatches > 1`) — emits the
+    per-microbatch grad pattern XLA's latency-hiding scheduler can overlap
+    with the next microbatch's compute;
+  * ZeRO-1 — optimizer moments sharded along the 'zero' (data) axis on the
+    first divisible dim of each leaf;
+  * donated params/opt-state/cache buffers;
+  * optional int8-compressed pod-axis gradient reduction (see
+    repro.optim.compress) for the DCN hop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    activation_rules,
+    params_shardings,
+    prune_for_mesh,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    zero1: bool = True
+    compress_pod_grads: bool = False
+    opt: AdamWConfig = AdamWConfig()
+
+
+# ---------------------------------------------------------------- shardings
+def batch_logical_axes(batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def rules_for_shape(cfg: ModelConfig, shape: ShapeSpec,
+                    mesh: Mesh) -> ShardingRules:
+    """Shape- and config-aware rule overrides (the baseline sharding scheme;
+    the §Perf hillclimb iterates by overriding the result).
+
+    Divisibility fallbacks (each dim must divide its mesh axis):
+      * kv_heads/heads indivisible by |model|  -> replicate (note: GQA archs
+        with few KV heads keep K/V projections replicated — a known baseline
+        cost, see EXPERIMENTS.md);
+      * vocab indivisible                       -> shard the embed-table
+        d_model dim instead ('embed_vec' -> model);
+      * n_experts indivisible                   -> TP inside experts
+        ('expert_ffn' -> model) instead of EP.
+    """
+    rules = DEFAULT_RULES
+    m = mesh.shape.get("model", 1)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+    if cfg.n_heads and cfg.n_heads % m:
+        rules = rules.replace(heads=None)
+    if cfg.n_kv_heads and cfg.n_kv_heads % m:
+        rules = rules.replace(kv_heads=None)
+    if cfg.d_ff and cfg.d_ff % m:
+        rules = rules.replace(ffn=None)
+    if cfg.vocab % m:
+        rules = rules.replace(vocab=None)
+        if cfg.d_model % m == 0:
+            rules = rules.replace(embed_vec="model")
+    if cfg.n_experts:
+        if cfg.n_experts % m:
+            rules = rules.replace(experts=None)
+            if cfg.d_expert % m == 0:
+                rules = rules.replace(expert_ffn="model")
+    if cfg.ssm_state:
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        conv_dim = d_in + 2 * cfg.ssm_state
+        if nh % m:
+            rules = rules.replace(ssm_heads=None)
+        if conv_dim % m:
+            rules = rules.replace(conv_dim=None)
+
+    if (shape.kind == "decode" and cfg.n_kv_heads and cfg.n_kv_heads % m
+            and shape.seq_len % m == 0):
+        # §Perf cell (b): GQA KV heads indivisible by |model| would replicate
+        # the KV cache over the model axis — shard the cache sequence dim
+        # there instead (11.6x on the dominant memory term for granite
+        # decode_32k; see EXPERIMENTS.md).
+        rules = rules.replace(kv_seq="model")
+
+    if shape.global_batch % dp != 0 or shape.global_batch < dp:
+        # batch unshardable (long_500k B=1): replicate batch, shard the
+        # sequence/state dims instead (SP).
+        d = mesh.shape.get("data", 1)
+        rules = rules.replace(
+            batch=None,
+            kv_seq="data" if shape.seq_len % d == 0 else None,
+            ssm_state="data" if (cfg.ssm_state and cfg.ssm_state % d == 0) else None,
+            seq="data" if shape.seq_len % d == 0 else None,
+        )
+    if shape.kind == "train" and shape.seq_len >= 16_384:
+        rules = rules.replace(seq="data")  # SP for long-sequence training
+    return rules
+
+
+def zero1_axes(logical_tree, shapes_tree, mesh: Mesh, rules: ShardingRules):
+    """Rewrite the first shardable None axis of each optimizer-moment leaf to
+    'zero' (the data axis) when the dim divides evenly — ZeRO-1."""
+    zset = rules.lookup("zero")
+    zsize = mesh.shape.get(zset, 1) if isinstance(zset, str) else 1
+
+    def rewrite(axes, shaped):
+        if zsize <= 1:
+            return axes
+        used = {a for a in axes if a is not None}
+        out = list(axes)
+        for i, (a, dim) in enumerate(zip(axes, shaped.shape)):
+            if a is None and dim % zsize == 0 and "zero" not in used:
+                out[i] = "zero"
+                break
+        return tuple(out)
+
+    return jax.tree.map(
+        rewrite, logical_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def make_state_shardings(model, mesh: Mesh, rules: ShardingRules,
+                         train_cfg: Optional[TrainConfig] = None):
+    """NamedShardings for (params, opt_state) trees."""
+    p_logical = model.logical_axes()
+    p_shard = params_shardings(mesh, rules, p_logical)
+    if train_cfg is None:
+        return p_shard, None
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mv_logical = p_logical
+    if train_cfg.zero1:
+        mv_logical = zero1_axes(p_logical, params_shapes, mesh, rules)
+    mv_shard = params_shardings(mesh, rules, mv_logical)
+    opt_shard = {"m": mv_shard, "v": mv_shard,
+                 "step": NamedSharding(mesh, P())}
+    return p_shard, opt_shard
+
+
+def make_batch_shardings(mesh: Mesh, rules: ShardingRules, batch_specs):
+    return {
+        k: NamedSharding(
+            mesh, rules.spec(("batch",) + (None,) * (len(v.shape) - 1)))
+        for k, v in batch_specs.items()
+    }
+
+
+# ---------------------------------------------------------------- train step
+def make_train_step(model, train_cfg: TrainConfig, rules: ShardingRules):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        l, metrics = model.loss(params, batch)
+        return l, metrics
+
+    def train_step(params, opt_state, batch):
+        with activation_rules(rules):
+            k = train_cfg.microbatches
+            if k == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+
+                def acc_body(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(
+                    acc_body, (zeros, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / k, grads)
+                loss = loss / k
+                metrics = {"loss": loss}
+            params, opt_state, om = adamw_update(
+                params, grads, opt_state, train_cfg.opt)
+            metrics = dict(metrics, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model, mesh: Mesh, rules: ShardingRules,
+                   train_cfg: TrainConfig, batch_specs):
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, opt_shard = make_state_shardings(model, mesh, rules, train_cfg)
+    b_shard = make_batch_shardings(mesh, rules, batch_specs)
+    step = make_train_step(model, train_cfg, rules)
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------- serve steps
+def make_prefill_step(model, rules: ShardingRules, max_seq: int):
+    def prefill_step(params, batch):
+        with activation_rules(rules):
+            return model.prefill(params, batch, max_seq)
+
+    return prefill_step
+
+
+def make_serve_step(model, rules: ShardingRules):
+    def serve_step(params, cache, tokens):
+        with activation_rules(rules):
+            return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def cache_shardings(model, mesh: Mesh, rules: ShardingRules, batch: int,
+                    max_seq: int):
+    logical = model.cache_logical_axes()
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+
+    def spec_of(axes, shaped):
+        axes = tuple(axes) + (None,) * (len(shaped.shape) - len(axes))
+        return NamedSharding(mesh, rules.spec(axes))
+
+    return jax.tree.map(
+        spec_of, logical, cache_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def jit_prefill_step(model, mesh: Mesh, rules: ShardingRules, batch_specs,
+                     max_seq: int, batch: int):
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    b_shard = make_batch_shardings(mesh, rules, batch_specs)
+    c_shard = cache_shardings(model, mesh, rules, batch, max_seq)
+    step = make_prefill_step(model, rules, max_seq)
+    return jax.jit(step, in_shardings=(p_shard, b_shard),
+                   out_shardings=(None, c_shard))
+
+
+def jit_serve_step(model, mesh: Mesh, rules: ShardingRules, batch: int,
+                   max_seq: int):
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    c_shard = cache_shardings(model, mesh, rules, batch, max_seq)
+    tok_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+    step = make_serve_step(model, rules)
+    return jax.jit(step, in_shardings=(p_shard, c_shard, tok_shard),
+                   out_shardings=(None, c_shard), donate_argnums=(1,))

@@ -1,0 +1,9 @@
+from repro.models.zoo import (
+    DecoderLM,
+    EncDecLM,
+    HybridLM,
+    MambaLM,
+    build_model,
+)
+
+__all__ = ["DecoderLM", "EncDecLM", "HybridLM", "MambaLM", "build_model"]

@@ -1,0 +1,252 @@
+"""GQA attention with RoPE / M-RoPE / qk-norm, KV cache, cross-attention.
+
+Three entry points sharing parameters:
+  * `attn_forward`  — full-sequence (train / prefill); optionally returns the
+    freshly built KV for cache initialisation;
+  * `attn_decode`   — one new token against a (B, S_max, Hkv, D) cache,
+    scatter-updating the cache at each sequence's current length;
+  * cross-attention — pass `kv_override` (encoder K/V) to `attn_forward`.
+
+The XLA einsum path is the default (it is what the multi-pod dry-run lowers);
+`repro.kernels.ops.attention[_decode]` is the tuned-Pallas lane selected by
+the WPK plan on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    dense,
+    dense_init,
+    norm_init,
+    rms_norm,
+)
+
+
+def attn_init(rng, cfg: ModelConfig, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(k1, d, cfg.n_heads * hd),
+        "wk": dense_init(k2, d, cfg.n_kv_heads * hd),
+        "wv": dense_init(k3, d, cfg.n_kv_heads * hd),
+        "wo": dense_init(k4, cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def attn_logical_axes(cfg: ModelConfig) -> Params:
+    p = {
+        "wq": {"w": ("embed", "heads")},
+        "wk": {"w": ("embed", "kv_heads")},
+        "wv": {"w": ("embed", "kv_heads")},
+        "wo": {"w": ("heads", "embed")},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": (None,)}
+        p["k_norm"] = {"scale": (None,)}
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: Optional[jnp.ndarray]):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if positions is not None:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+_CHUNKED_KV_THRESHOLD = 1024
+_KV_CHUNK = 1024
+
+
+def _sdpa_direct(q, k, v, causal: bool, q_per_kv: int) -> jnp.ndarray:
+    """einsum attention, GQA grouped so the KV is never repeated in HBM."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, sq, hkv, q_per_kv, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, q_per_kv: int,
+                  kv_chunk: int = _KV_CHUNK) -> jnp.ndarray:
+    """Online-softmax attention scanned over KV chunks — the XLA-path
+    flash-attention equivalent.  Peak logits temp drops from O(Sq*Skv) to
+    O(Sq*kv_chunk); `jax.checkpoint` on the chunk body keeps backward at the
+    same footprint (recompute per chunk).  Numerics match `_sdpa_direct` to
+    ~1e-6 (same f32 accumulation)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    nc = skv // kv_chunk
+    assert skv % kv_chunk == 0, (skv, kv_chunk)
+    qg = q.reshape(b, sq, hkv, q_per_kv, d)
+    kc = k.reshape(b, nc, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq) + (skv - sq)  # query absolute positions
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_blk).astype(jnp.float32) * scale
+        if causal:
+            kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, -1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk)
+        return (m_new, l_new, acc), None
+
+    from repro.models import runmode
+    m0 = jnp.full((b, hkv, q_per_kv, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, q_per_kv, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, q_per_kv, sq, d), jnp.float32)
+    (m, l, acc), _ = runmode.layer_scan(body, (m0, l0, a0),
+                                        (kc, vc, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _kv_chunk_for(skv: int, target: int = _KV_CHUNK) -> int:
+    """Largest divisor of skv that is <= target (>= 64 to stay MXU-friendly)."""
+    best = 0
+    for c in range(min(target, skv), 63, -1):
+        if skv % c == 0:
+            best = c
+            break
+    return best
+
+
+def _sdpa(q, k, v, causal: bool, q_per_kv: int) -> jnp.ndarray:
+    skv = k.shape[1]
+    if skv >= _CHUNKED_KV_THRESHOLD:
+        chunk = _kv_chunk_for(skv)
+        if chunk and skv // chunk > 1:
+            return _sdpa_chunked(q, k, v, causal, q_per_kv, kv_chunk=chunk)
+    return _sdpa_direct(q, k, v, causal, q_per_kv)
+
+
+def attn_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                         # (B, S, d)
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    return_kv: bool = False,
+):
+    b, s, _ = x.shape
+    if kv_override is not None:             # cross-attention
+        hd = cfg.hd
+        q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(p["q_norm"], q)
+        k, v = kv_override
+        causal = False
+    else:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _sdpa(q, k, v, causal, cfg.q_per_kv)
+    out = constrain(out, ("batch", None, "heads", None))
+    y = dense(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.hd))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_kv(p: Params, cfg: ModelConfig, enc: jnp.ndarray):
+    """Precompute encoder K/V once for all decoder steps."""
+    b, s, _ = enc.shape
+    hd = cfg.hd
+    k = dense(p["wk"], enc).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], enc).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rms_norm(p["k_norm"], k)
+    return k, v
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    shape = (n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def cache_logical_axes() -> Dict[str, Any]:
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def attn_decode(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                 # (B, 1, d)
+    k_cache: jnp.ndarray,           # (B, S_max, Hkv, hd)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,           # (B,) current lengths (position of new tok)
+):
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None])
+    if cfg.mrope_sections:
+        # decode positions for M-RoPE: all three streams equal (text token)
+        pos3 = jnp.broadcast_to(lengths[:, None, None], (b, 1, 3))
+        q, k_new, v_new = _project_qkv(p, cfg, x, pos3)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, lengths].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, lengths].set(v_new[:, 0])
+
+    scale = 1.0 / np.sqrt(cfg.hd)
+    hkv, g = cfg.n_kv_heads, cfg.q_per_kv
+    qg = q.reshape(b, hkv, g, cfg.hd)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])[None, None, None, :]
+    logits = jnp.where(pos <= lengths[:, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache)
+    y = dense(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
+    return y, k_cache, v_cache

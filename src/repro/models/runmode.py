@@ -1,0 +1,44 @@
+"""Lowering mode for the dry-run cost analysis.
+
+XLA's `cost_analysis()` counts a while-loop body ONCE, so a scanned-layers
+program under-reports FLOPs by ~n_layers x.  The dry-run therefore lowers
+each cell twice:
+
+  deploy program — scan-over-layers, chunked attention/loss, microbatched:
+                   what actually runs; used for the compile proof,
+                   memory_analysis and the HLO collective schedule (with
+                   trip-count correction);
+  cost program   — COST_MODE=True: layer scans fully unrolled, direct
+                   (unchunked) attention and loss so every FLOP appears in
+                   the top-level computation.  Compiled only for
+                   cost_analysis; its buffers are never allocated.
+
+The tiny SSD inter-chunk state scan stays rolled in both modes (its body is
+a (h, p, n) elementwise update — negligible FLOPs; noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import jax
+
+COST_MODE = False
+
+
+class cost_mode:
+    def __init__(self, on: bool = True):
+        self.on = on
+
+    def __enter__(self):
+        global COST_MODE
+        self.prev = COST_MODE
+        COST_MODE = self.on
+
+    def __exit__(self, *exc):
+        global COST_MODE
+        COST_MODE = self.prev
+
+
+def layer_scan(body, init, xs, length=None):
+    """lax.scan that fully unrolls in cost mode."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if COST_MODE else 1)

@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.compress import int8_compress, int8_decompress, compressed_allgather_mean
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+    "int8_compress",
+    "int8_decompress",
+    "compressed_allgather_mean",
+]

@@ -1,0 +1,40 @@
+"""int8 gradient compression for cross-pod (DCN) reductions.
+
+Pod-to-pod bandwidth is ~30x scarcer than in-pod ICI, so the pod-axis
+gradient reduction is the first collective to compress at multi-pod scale.
+`compressed_allgather_mean` runs under `shard_map` over the 'pod' axis:
+
+    f32 all-reduce           : ~2 x 4N bytes on the wire
+    int8 all-gather + local  : P x N x 1 byte  (P=2 pods -> ~4x fewer bytes)
+
+Per-tensor symmetric scaling keeps the quantisation error ~0.4% of the grad
+scale; the trainer exposes it behind `TrainConfig.compress_pod_grads` and the
+collective shows up as an int8 all-gather in the lowered HLO (visible to the
+roofline's collective-bytes parser).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allgather_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean over `axis_name` using int8 all-gather (call under shard_map)."""
+    q, scale = int8_compress(x)
+    qs = jax.lax.all_gather(q, axis_name)              # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0).astype(x.dtype)

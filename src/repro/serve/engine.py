@@ -1,0 +1,124 @@
+"""Batched serving engine (the paper is an *inference* system — this is the
+end-to-end driver deliverable).
+
+Request lifecycle: submit(prompt) -> queued -> batched prefill -> greedy
+decode loop -> done.  The engine runs fixed-size batches (padding the last
+batch) with two jit'd programs: `prefill_step` and `serve_step` — the same
+functions the multi-pod dry-run lowers, so what is served here is exactly
+what was compile-validated on the production mesh.
+
+WPK integration: when the model's matmul/attention backends were tuned by
+the WPK plan, the serve path inherits them; the e2e benchmark
+(`benchmarks/bench_e2e.py`) compares plans the way the paper's §3.4 compares
+WPK vs TensorRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules
+from repro.launch.steps import jit_prefill_step, jit_serve_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 4
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1          # -1: never stop early (synthetic vocab)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    output: List[int] = dataclasses.field(default_factory=list)
+    latency_s: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, mesh, rules: ShardingRules,
+                 cfg: ServeConfig, extras: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        self.cfg = cfg
+        self.extras = extras or {}
+        self.queue: List[Request] = []
+        self._rid = 0
+        self._prefill = None
+        self._decode = None
+        self.stats = {"requests": 0, "tokens_out": 0, "decode_s": 0.0,
+                      "prefill_s": 0.0}
+
+    def submit(self, prompt: np.ndarray) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32)))
+        return self._rid
+
+    def _build(self, prompt_len: int):
+        b = self.cfg.batch_size
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((b, prompt_len), jnp.int32)}
+        for k, v in self.extras.items():
+            batch_specs[k] = jax.ShapeDtypeStruct((b,) + v.shape, v.dtype)
+        self._prefill = jit_prefill_step(self.model, self.mesh, self.rules,
+                                         batch_specs, self.cfg.max_seq, b)
+        self._decode = jit_serve_step(self.model, self.mesh, self.rules,
+                                      b, self.cfg.max_seq)
+
+    def run(self) -> List[Request]:
+        """Drain the queue in fixed-size batches; returns completed requests."""
+        done: List[Request] = []
+        cfg = self.cfg
+        with self.mesh:
+            while self.queue:
+                batch_reqs = self.queue[: cfg.batch_size]
+                self.queue = self.queue[cfg.batch_size:]
+                n = len(batch_reqs)
+                plen = max(len(r.prompt) for r in batch_reqs)
+                toks = np.zeros((cfg.batch_size, plen), np.int32)
+                for i, r in enumerate(batch_reqs):
+                    toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+                if self._prefill is None:
+                    self._build(plen)
+
+                t0 = time.perf_counter()
+                batch = {"tokens": jnp.asarray(toks)}
+                for k, v in self.extras.items():
+                    batch[k] = jnp.broadcast_to(
+                        jnp.asarray(v)[None], (cfg.batch_size,) + v.shape)
+                logits, cache = self._prefill(self.params, batch)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                self.stats["prefill_s"] += time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                outs = [nxt]
+                for _ in range(cfg.max_new_tokens - 1):
+                    logits, cache = self._decode(self.params, cache, nxt[:, None])
+                    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                    outs.append(nxt)
+                out_tokens = np.stack([np.asarray(o) for o in outs], 1)
+                dt = time.perf_counter() - t0
+                self.stats["decode_s"] += dt
+
+                for i, r in enumerate(batch_reqs):
+                    seq = out_tokens[i].tolist()
+                    if cfg.eos_id >= 0 and cfg.eos_id in seq:
+                        seq = seq[: seq.index(cfg.eos_id) + 1]
+                    r.output = seq
+                    r.latency_s = dt
+                    done.append(r)
+                self.stats["requests"] += n
+                self.stats["tokens_out"] += n * cfg.max_new_tokens
+        return done
+
+    def throughput(self) -> float:
+        return self.stats["tokens_out"] / max(1e-9, self.stats["decode_s"])

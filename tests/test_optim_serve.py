@@ -1,0 +1,193 @@
+"""Optimizer, PPO internals, mamba SSD oracle, and the serving engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    int8_compress,
+    int8_decompress,
+)
+
+
+def test_adamw_minimises_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0,
+                      grad_clip=10.0)
+    params = {"w": jnp.asarray(np.array([3.0, -2.0], np.float32))}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clipping():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    new_norm = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert new_norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(cosine_schedule(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(cosine_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cosine_schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_int8_compression_error_bound():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000).astype(np.float32))
+    q, s = int8_compress(x)
+    back = int8_decompress(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(s) + 1e-6)
+
+
+# ------------------------------------------------------------------- PPO
+def test_gae_matches_naive():
+    from repro.core.search.ppo import gae
+    rng = np.random.default_rng(0)
+    T = 16
+    r = rng.standard_normal(T).astype(np.float32)
+    v = rng.standard_normal(T + 1).astype(np.float32)
+    gamma, lam = 0.9, 0.8
+    adv, ret = gae(r, v, gamma, lam)
+    # naive O(T^2)
+    for t in range(T):
+        acc, coef = 0.0, 1.0
+        for l in range(T - t):
+            delta = r[t + l] + gamma * v[t + l + 1] - v[t + l]
+            acc += coef * delta
+            coef *= gamma * lam
+        assert adv[t] == pytest.approx(acc, rel=1e-4, abs=1e-4)
+    np.testing.assert_allclose(ret, adv + v[:-1], rtol=1e-6)
+
+
+def test_ppo_policy_architecture_matches_paper():
+    """FC 512/1024/1024/512 + final linear head (paper §2.4)."""
+    from repro.core.search.ppo import init_params, POLICY_WIDTHS, POLICY_ACTS
+    assert POLICY_WIDTHS == (512, 1024, 1024, 512)
+    assert POLICY_ACTS == ("tanh", "tanh", "selu", "selu")
+    p = init_params(jax.random.PRNGKey(0), obs_dim=17, n_actions=10)
+    widths = [layer["w"].shape for layer in p["policy"]]
+    assert widths == [(17, 512), (512, 1024), (1024, 1024), (1024, 512), (512, 10)]
+
+
+def test_ppo_update_moves_params_and_loss_finite():
+    from repro.core.search.ppo import PPOAgent, PPOConfig
+    agent = PPOAgent(obs_dim=17, n_actions=6,
+                     cfg=PPOConfig(epochs=1, minibatch=8), seed=0)
+    rng = np.random.default_rng(0)
+    T = 16
+    obs = rng.standard_normal((T, 17)).astype(np.float32)
+    acts, logps = zip(*(agent.act(o) for o in obs))
+    rew = rng.standard_normal(T).astype(np.float32)
+    before = np.asarray(agent.params["policy"][0]["w"]).copy()
+    loss = agent.update(obs, list(acts), list(logps), rew, obs[-1])
+    assert np.isfinite(loss)
+    after = np.asarray(agent.params["policy"][0]["w"])
+    assert not np.array_equal(before, after)
+
+
+def test_rl_reward_equation4():
+    """r_t = alpha_{t-1} - min(beta_t, 2 alpha_{t-1})."""
+    alpha = 10.0
+    assert alpha - min(5.0, 2 * alpha) == 5.0      # faster -> positive
+    assert alpha - min(15.0, 2 * alpha) == -5.0    # slower -> negative
+    assert alpha - min(100.0, 2 * alpha) == -alpha  # clamped worst case
+
+
+# ------------------------------------------------------------------ mamba
+def test_ssd_chunked_matches_naive_recurrence():
+    from repro.models.mamba import ssd_chunked
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 24, 3, 4, 8
+    x = rng.standard_normal((b, s, h, p)) * 0.5
+    dt = rng.random((b, s, h)) * 0.5
+    A = -rng.random(h)
+    B = rng.standard_normal((b, s, n)) * 0.5
+    C = rng.standard_normal((b, s, n)) * 0.5
+
+    hstate = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        dA = np.exp(dt[:, t] * A)
+        hstate = hstate * dA[..., None, None] + np.einsum(
+            "bhp,bn,bh->bhpn", x[:, t], B[:, t], dt[:, t])
+        ys.append(np.einsum("bhpn,bn->bhp", hstate, C[:, t]))
+    y_ref = np.stack(ys, 1)
+
+    y, hf = ssd_chunked(jnp.asarray(x, jnp.float32), jnp.asarray(dt, jnp.float32),
+                        jnp.asarray(A, jnp.float32), jnp.asarray(B, jnp.float32),
+                        jnp.asarray(C, jnp.float32), chunk=8)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hf), hstate, rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_prefill_state_equals_decode_rollout():
+    """Prefill final SSM state must equal the state after decoding the same
+    tokens one by one (SSD <-> recurrence duality)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("mamba2-2.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 16
+    toks = jnp.asarray(np.arange(S).reshape(1, S) % cfg.vocab, jnp.int32)
+    _, cache_pre = model.prefill(params, {"tokens": toks}, max_seq=S)
+
+    cache = jax.tree.map(jnp.zeros_like, cache_pre)
+    cache["lengths"] = jnp.zeros((B,), jnp.int32)
+    for t in range(S):
+        _, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(cache["ssm"], np.float32),
+                               np.asarray(cache_pre["ssm"], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------------------------------------ serve
+def test_serve_engine_end_to_end():
+    from repro.configs import get_config
+    from repro.distributed.sharding import DEFAULT_RULES
+    from repro.launch.mesh import single_device_mesh
+    from repro.models import build_model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, single_device_mesh(), DEFAULT_RULES,
+                      ServeConfig(batch_size=2, max_seq=64, max_new_tokens=8))
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, size=12)) for _ in range(5)]
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.output) == 8
+        assert all(0 <= t < cfg.vocab for t in r.output)
+    assert eng.stats["requests"] == 5
+    assert eng.throughput() > 0
+
+
+def test_serve_greedy_decode_matches_forward_argmax():
+    """The served first token must equal argmax of the forward logits."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S = 12
+    toks = jnp.asarray(np.arange(S).reshape(1, S) % cfg.vocab, jnp.int32)
+    logits = model.forward(params, {"tokens": toks})
+    want = int(jnp.argmax(logits[0, -1]))
+    lp, _ = model.prefill(params, {"tokens": toks}, max_seq=S + 4)
+    got = int(jnp.argmax(lp[0, -1]))
+    assert got == want
