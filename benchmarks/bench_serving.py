@@ -1,0 +1,222 @@
+"""Serving benchmark: continuous batching + paged KV-cache vs fixed batches.
+
+Both engines serve the SAME workload — Poisson arrivals, mixed prompt
+lengths, mixed per-request generation budgets — against the same model and
+the same wall clock:
+
+  fixed      — the original `FixedBatchEngine` drain loop driven
+               arrival-aware: a batch forms from whatever has arrived,
+               prompts pad to the provisioned maximum, and every batch
+               decodes the full worst-case token budget (a static-batch
+               server cannot stop per-request);
+  continuous — `ContinuousEngine`: requests join the in-flight decode batch
+               the step after they arrive, KV lives in pages, and each
+               request retires at exactly its own budget.
+
+Reported per engine: useful tokens/s (only the tokens each request asked
+for count), latency p50/p95 (completion - arrival), and for the continuous
+engine TTFT and occupancy.  The paper's §3.4 claim shape (e2e serving
+speedup at matched latency) reproduces here as the tokens/s ratio at the
+reported p95s.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--requests 32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from collections import deque
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    FixedBatchEngine,
+    RuntimeConfig,
+    ServeConfig,
+    percentile,
+)
+
+
+def make_workload(rng: np.random.Generator, n: int, vocab: int, rate_hz: float,
+                  prompt_lo: int = 8, prompt_hi: int = 48,
+                  new_lo: int = 2, new_hi: int = 32):
+    """Poisson arrivals with mixed prompt lengths and generation budgets."""
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(prompt_lo, prompt_hi + 1))
+        out.append({
+            "prompt": rng.integers(0, vocab, size=plen).astype(np.int32),
+            "max_new": int(rng.integers(new_lo, new_hi + 1)),
+            "arrival": float(arrivals[i]),
+        })
+    return out
+
+
+# ----------------------------------------------------------------- continuous
+def drive_continuous(engine: ContinuousEngine, workload) -> dict:
+    t0 = time.perf_counter()
+    engine.metrics.start_time = t0
+    for w in workload:
+        engine.submit(w["prompt"], max_new_tokens=w["max_new"],
+                      arrival_time=t0 + w["arrival"])
+    done = engine.run()
+    s = engine.metrics.summary()
+    return {
+        "tokens_per_s": s["tokens_per_s"],
+        "latency_p50_s": s["latency_p50_s"],
+        "latency_p95_s": s["latency_p95_s"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "slot_occupancy": s["slot_occupancy_mean"],
+        "cache_occupancy": s["cache_occupancy_mean"],
+        "tokens": int(s["tokens_out"]),
+        "done": len(done),
+    }
+
+
+# ---------------------------------------------------------------- fixed batch
+def drive_fixed(model, params, mesh, cfg: ServeConfig, prompt_pad: int,
+                workload) -> dict:
+    """Arrival-aware driver around the static drain loop: batches form from
+    arrived requests only; prompts pad to the provisioned max; every batch
+    decodes the full worst-case budget."""
+    eng = FixedBatchEngine(model, params, mesh, DEFAULT_RULES, cfg)
+
+    def pad(p):
+        out = np.zeros((prompt_pad,), np.int32)
+        out[prompt_pad - len(p):] = p          # static server left-pads
+        return out
+
+    # warm the two compiled programs outside the timed region
+    eng.submit(pad(workload[0]["prompt"]))
+    eng.run()
+    eng.stats = {k: 0 if isinstance(v, int) else 0.0
+                 for k, v in eng.stats.items()}
+
+    pending = deque(workload)
+    latencies: List[float] = []
+    useful_tokens = 0
+    t0 = time.perf_counter()
+    t_last = t0
+    while pending:
+        now = time.perf_counter() - t0
+        batch = []
+        while (pending and pending[0]["arrival"] <= now
+               and len(batch) < cfg.batch_size):
+            batch.append(pending.popleft())
+        if not batch:
+            time.sleep(min(1e-3, pending[0]["arrival"] - now))
+            continue
+        for w in batch:
+            eng.submit(pad(w["prompt"]))
+        eng.run()
+        t_done = time.perf_counter()
+        t_last = t_done
+        for w in batch:
+            latencies.append((t_done - t0) - w["arrival"])
+            useful_tokens += w["max_new"]
+    wall = max(1e-9, t_last - t0)
+    return {
+        "tokens_per_s": useful_tokens / wall,
+        "latency_p50_s": percentile(latencies, 50),
+        "latency_p95_s": percentile(latencies, 95),
+        "tokens": useful_tokens,
+        "done": len(latencies),
+    }
+
+
+# -------------------------------------------------------------------- harness
+def bench(requests: int = 32, slots: int = 4, seed: int = 0,
+          rate_hz: float = 0.0, verbose: bool = True) -> dict:
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
+                                           vocab=211)
+    model = build_model(cfg)
+    mesh = single_device_mesh()
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+
+    prompt_hi, new_hi = 48, 32
+    rcfg = RuntimeConfig(max_slots=slots, block_size=16,
+                         max_blocks_per_seq=-(-(prompt_hi + new_hi) // 16),
+                         max_new_tokens=new_hi)
+    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg)
+
+    # Warm-up: compile every prefill bucket + the decode program.
+    warm = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+            for s in (8, prompt_hi // 2, prompt_hi)] * 2
+    for p in warm:
+        engine.submit(p, max_new_tokens=4)
+    engine.run()
+    # Measure sustained (post-compile) capacity with a saturated burst.
+    t0 = time.perf_counter()
+    burst = 3 * slots
+    for _ in range(burst):
+        engine.submit(rng.integers(0, cfg.vocab, size=prompt_hi // 2)
+                      .astype(np.int32), max_new_tokens=16)
+    engine.run()
+    cap_tok_s = (burst * 16) / (time.perf_counter() - t0)
+    engine.reset_metrics()
+
+    avg_new = (2 + new_hi) / 2
+    if rate_hz <= 0:
+        # offer ~1.3x sustained capacity: both engines run saturated, so
+        # tokens/s measures ENGINE capacity rather than the arrival rate.
+        rate_hz = max(0.1, 1.3 * cap_tok_s / avg_new)
+    if verbose:
+        print(f"sustained decode capacity ~{cap_tok_s:,.0f} tok/s -> "
+              f"Poisson rate {rate_hz:.2f} req/s")
+
+    workload = make_workload(rng, requests, cfg.vocab, rate_hz,
+                             prompt_hi=prompt_hi, new_hi=new_hi)
+
+    cont = drive_continuous(engine, workload)
+    fixed = drive_fixed(
+        model, params, mesh,
+        ServeConfig(batch_size=slots, max_seq=prompt_hi + new_hi,
+                    max_new_tokens=new_hi),
+        prompt_pad=prompt_hi, workload=workload)
+
+    speedup = cont["tokens_per_s"] / max(1e-9, fixed["tokens_per_s"])
+    if verbose:
+        print(f"fixed      : {fixed['tokens_per_s']:8.1f} tok/s | "
+              f"p50 {fixed['latency_p50_s']:6.2f}s  p95 {fixed['latency_p95_s']:6.2f}s | "
+              f"{fixed['done']} reqs")
+        print(f"continuous : {cont['tokens_per_s']:8.1f} tok/s | "
+              f"p50 {cont['latency_p50_s']:6.2f}s  p95 {cont['latency_p95_s']:6.2f}s | "
+              f"ttft p50 {cont['ttft_p50_s']:.2f}s | slot occ "
+              f"{cont['slot_occupancy']:.0%} | cache occ {cont['cache_occupancy']:.0%}")
+        print(f"continuous-batching speedup: {speedup:.2f}x tokens/s "
+              f"(target >= 1.3x at equal-or-better p95: "
+              f"{'PASS' if speedup >= 1.3 and cont['latency_p95_s'] <= fixed['latency_p95_s'] else 'MISS'})")
+    return {"fixed": fixed, "continuous": cont, "speedup": speedup}
+
+
+def run(csv_rows):
+    """benchmarks.run harness entry."""
+    r = bench(requests=24, slots=4, verbose=False)
+    csv_rows.append(("serve_fixed_tok_s", r["fixed"]["tokens_per_s"], ""))
+    csv_rows.append(("serve_continuous_tok_s", r["continuous"]["tokens_per_s"],
+                     f"p95={r['continuous']['latency_p95_s']:.2f}s"))
+    csv_rows.append(("serve_speedup_x", r["speedup"],
+                     "continuous vs fixed, same Poisson workload"))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = auto from capacity")
+    args = ap.parse_args()
+    bench(args.requests, args.slots, args.seed, args.rate)

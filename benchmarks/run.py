@@ -12,6 +12,7 @@ from benchmarks import (
     bench_roofline,
     bench_search_methods,
     bench_search_speed,
+    bench_serving,
 )
 
 SUITES = {
@@ -20,6 +21,7 @@ SUITES = {
     "search_speed": bench_search_speed.run,    # Fig 3b
     "e2e": bench_e2e.run,                      # §3.4
     "roofline": bench_roofline.run,            # deliverable (g)
+    "serving": bench_serving.run,              # §3.4 e2e serving speed
 }
 
 

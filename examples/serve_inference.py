@@ -2,8 +2,9 @@
 
 Boots a small qwen3-family LM, briefly trains it on the synthetic pipeline
 so decode produces the learnable next-token structure, then serves a queue
-of batched requests through the prefill/decode engine — the same
-`prefill_step`/`serve_step` programs the 512-chip dry-run compile-validates.
+of requests through the continuous-batching runtime: WPK inference plan ->
+plan-aware router -> slot scheduler -> paged KV-cache -> one jitted decode
+program that requests join and leave in flight.
 
 Run:  PYTHONPATH=src python examples/serve_inference.py [--requests 12]
 """
@@ -15,13 +16,19 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.search.tuner import Tuner
 from repro.data import DataConfig, SyntheticLMData
 from repro.distributed.sharding import DEFAULT_RULES
 from repro.launch.mesh import single_device_mesh
 from repro.launch.steps import TrainConfig, jit_train_step
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import (
+    ContinuousEngine,
+    PlanRouter,
+    RuntimeConfig,
+    build_serve_plan,
+)
 
 
 def main() -> None:
@@ -29,6 +36,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--train-steps", type=int, default=30)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--no-plan", action="store_true",
+                    help="skip WPK plan tuning (pure XLA dispatch)")
     args = ap.parse_args()
 
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
@@ -52,29 +61,45 @@ def main() -> None:
         print(f"warm-up train: final loss {float(m['loss']):.3f} "
               f"({args.train_steps} steps)")
 
-    engine = ServeEngine(model, params, mesh, DEFAULT_RULES,
-                         ServeConfig(batch_size=4, max_seq=64,
-                                     max_new_tokens=args.new_tokens))
+    rcfg = RuntimeConfig(max_slots=4, block_size=16, max_blocks_per_seq=4,
+                         max_new_tokens=args.new_tokens)
+    router = PlanRouter(None)
+    if not args.no_plan:
+        t0 = time.perf_counter()
+        plan = build_serve_plan(
+            cfg, prefill_len=32, slots=rcfg.max_slots, max_seq=rcfg.max_seq,
+            tuner=Tuner(methods=("random",), random_budget=16))
+        router = PlanRouter(plan)
+        print(f"serve plan tuned in {time.perf_counter() - t0:.1f}s: "
+              f"{router.describe()}")
+
+    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg,
+                              router=router)
     rng = np.random.default_rng(0)
     correct = 0
-    prompts = []
+    prompts = {}
     for _ in range(args.requests):
         start = int(rng.integers(0, cfg.vocab))
         prompt = (start + 17 * np.arange(16)) % cfg.vocab  # pipeline's rule
-        prompts.append(prompt)
-        engine.submit(prompt)
+        rid = engine.submit(prompt)
+        prompts[rid] = prompt
 
     t0 = time.perf_counter()
     done = engine.run()
     wall = time.perf_counter() - t0
 
-    for req, prompt in zip(done, prompts):
+    for req in done:
+        prompt = prompts[req.rid]
         want = (prompt[-1] + 17 * (1 + np.arange(args.new_tokens))) % cfg.vocab
         correct += int(np.array_equal(req.output, want))
+    s = engine.metrics.summary()
     print(f"served {len(done)} requests in {wall:.2f}s | "
-          f"decode throughput {engine.throughput():,.0f} tok/s | "
-          f"prefill {engine.stats['prefill_s']:.2f}s "
-          f"decode {engine.stats['decode_s']:.2f}s")
+          f"{s['tokens_per_s']:,.0f} tok/s | "
+          f"latency p50 {s['latency_p50_s']:.2f}s p95 {s['latency_p95_s']:.2f}s | "
+          f"ttft p50 {s['ttft_p50_s']:.2f}s | "
+          f"slot occ {s['slot_occupancy_mean']:.0%} | "
+          f"cache occ mean {s['cache_occupancy_mean']:.0%} "
+          f"max {s['cache_occupancy_max']:.0%}")
     print(f"{correct}/{len(done)} requests continued the learned sequence exactly")
 
 

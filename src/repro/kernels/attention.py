@@ -29,18 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import tpu as pltpu
-except Exception:  # pragma: no cover
-    pltpu = None
+from repro.kernels.pallas_compat import pltpu, vmem_scratch
 
 NEG_INF = -1e30
 
 
 def _scratch(shape, dtype=jnp.float32):
-    if pltpu is not None:
-        return pltpu.VMEM(shape, dtype)
-    return pl.MemoryRef(shape, dtype)  # pragma: no cover
+    return vmem_scratch(shape, dtype)
 
 
 # ---------------------------------------------------------------- prefill
@@ -165,6 +160,99 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l = l_ref[...]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, nbt: int, block_size: int,
+                         scale: float, out_dtype):
+    """One (slot, logical-block) grid step of paged decode attention.
+
+    The physical KV block this step reads was selected by the BlockSpec
+    index map from the scalar-prefetched block table — the kernel body only
+    ever sees a dense (block_size, D) tile, so the online softmax is
+    identical to the monolithic decode kernel."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * block_size < length)
+    def _body():
+        q = q_ref[0]                                   # (H, D)
+        k = k_ref[0]                                   # (block_size, D)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nbt - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,             # (B, H, D) single new token per sequence
+    k_pool: jnp.ndarray,        # (num_blocks, block_size, D) one KV head's pool
+    v_pool: jnp.ndarray,
+    lengths: jnp.ndarray,       # (B,) int32 valid context lengths
+    block_tables: jnp.ndarray,  # (B, nbt) int32 physical block ids
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Block-table-aware flash decode: the grid walks each slot's *logical*
+    blocks and the scalar-prefetched table indirects to physical pool blocks,
+    so the kernel never materialises a gathered contiguous cache."""
+    if pltpu is None:  # pragma: no cover - no TPU pallas module at all
+        raise NotImplementedError("paged decode kernel needs pallas TPU")
+    b, h, d = q.shape
+    _, block_size, _ = k_pool.shape
+    nbt = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, nbt=nbt, block_size=block_size, scale=scale,
+        out_dtype=q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # lengths + block table drive the DMA
+        grid=(b, nbt),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bb, j, lens, bt: (bb, 0, 0)),
+            pl.BlockSpec((1, block_size, d),
+                         lambda bb, j, lens, bt: (bt[bb, j], 0, 0)),
+            pl.BlockSpec((1, block_size, d),
+                         lambda bb, j, lens, bt: (bt[bb, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bb, j, lens, bt: (bb, 0, 0)),
+        scratch_shapes=[
+            _scratch((h, 1)),
+            _scratch((h, 1)),
+            _scratch((h, d)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q,
+      k_pool, v_pool)
 
 
 def flash_decode_padded(

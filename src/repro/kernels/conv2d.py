@@ -29,11 +29,6 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.ref import apply_activation
 
-try:
-    from jax.experimental.pallas import tpu as pltpu
-except Exception:  # pragma: no cover
-    pltpu = None
-
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, stride: int,
                  row_block: int, ow: int, activation: Optional[str], out_dtype):

@@ -24,19 +24,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_compat import tpu_compiler_params, vmem_scratch
 from repro.kernels.ref import apply_activation
 
-try:  # TPU compiler params are advisory; interpret mode ignores them.
-    from jax.experimental.pallas import tpu as pltpu
 
-    def _compiler_params(order):
-        sem = ("parallel", "parallel", "arbitrary")
-        return pltpu.CompilerParams(dimension_semantics=sem)
-except Exception:  # pragma: no cover
-    pltpu = None
-
-    def _compiler_params(order):
-        return None
+def _compiler_params(order):
+    # TPU compiler params are advisory; interpret mode ignores them.
+    sem = ("parallel", "parallel", "arbitrary")
+    return tpu_compiler_params(dimension_semantics=sem)
 
 
 def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kt: int,
@@ -121,9 +116,7 @@ def matmul_padded(
 
 
 def _acc_scratch(bm: int, bn: int):
-    if pltpu is not None:
-        return pltpu.VMEM((bm, bn), jnp.float32)
-    return pl.MemoryRef((bm, bn), jnp.float32)  # pragma: no cover
+    return vmem_scratch((bm, bn), jnp.float32)
 
 
 def _matmul_nobias_kernel(x_ref, w_ref, o_ref, acc_ref, *, kt, activation, out_dtype):

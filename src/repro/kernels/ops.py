@@ -23,7 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as _ref
-from repro.kernels.attention import flash_attention_padded, flash_decode_padded
+from repro.kernels.attention import (
+    flash_attention_padded,
+    flash_decode_paged,
+    flash_decode_padded,
+)
 from repro.kernels.conv2d import conv2d_direct
 from repro.kernels.fused import fused_elementwise as _fused_elementwise
 from repro.kernels.matmul import matmul_padded
@@ -187,6 +191,39 @@ def attention_decode(
         vg = _pad_to(v_cache[:, :, g], 1, bkv)
         outs.append(flash_decode_padded(qg, kg, vg, lengths, block_kv=bkv,
                                         scale=scale, interpret=interpret))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_decode_paged(
+    q: jnp.ndarray,             # (B, H, D)
+    k_pool: jnp.ndarray,        # (num_blocks, block_size, Hkv, D)
+    v_pool: jnp.ndarray,
+    lengths: jnp.ndarray,       # (B,) valid context lengths (incl. new token)
+    block_tables: jnp.ndarray,  # (B, nbt) physical block ids per slot
+    *,
+    scale: Optional[float] = None,
+    config: Config = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Paged decode attention over the block pool (continuous-batching lane).
+
+    Same per-KV-head grouping as `attention_decode`, but the cache argument
+    is the shared physical pool + per-slot block tables instead of a dense
+    per-sequence cache, so admission of a new request only rewrites the
+    (host-built) tables — shapes, and therefore the compiled program, are
+    invariant."""
+    del config  # block geometry is fixed by the pool; nothing to tune yet
+    b, h, d = q.shape
+    hkv = k_pool.shape[2]
+    group = h // hkv
+
+    outs = []
+    for g in range(hkv):
+        qg = q[:, g * group : (g + 1) * group]          # (B, group, D)
+        kg = k_pool[:, :, g]                            # (nb, bs, D)
+        vg = v_pool[:, :, g]
+        outs.append(flash_decode_paged(qg, kg, vg, lengths, block_tables,
+                                       scale=scale, interpret=interpret))
     return jnp.concatenate(outs, axis=1)
 
 

@@ -1,0 +1,59 @@
+"""Version-compat shim over `jax.experimental.pallas.tpu`.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(`CompilerParams` -> `TPUCompilerParams` -> back again in newer trees), and
+on CPU-only builds the TPU module may not import at all.  Every kernel
+module goes through this shim instead of touching `pltpu` directly, so a
+JAX upgrade is a one-file fix:
+
+  * `pltpu`                  — the TPU pallas module, or None when absent;
+  * `tpu_compiler_params()`  — construct compiler params by keyword,
+                               whichever class name this JAX exposes
+                               (returns None when unavailable);
+  * `vmem_scratch()`         — a VMEM scratch allocation, falling back to
+                               `pl.MemoryRef` for pure-interpret setups.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover - CPU-only wheels without the TPU module
+    pltpu = None
+
+# The compiler-params class under whichever name this JAX release uses.
+_COMPILER_PARAMS_CLS = None
+if pltpu is not None:
+    for _name in ("TPUCompilerParams", "CompilerParams"):
+        _COMPILER_PARAMS_CLS = getattr(pltpu, _name, None)
+        if _COMPILER_PARAMS_CLS is not None:
+            break
+
+
+def tpu_compiler_params(**kwargs: Any) -> Optional[Any]:
+    """Build TPU compiler params from keywords; None if unsupported.
+
+    Unknown keywords are dropped (older releases accept fewer fields) so
+    callers can always pass the full set of hints they want.
+    """
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    fields = getattr(_COMPILER_PARAMS_CLS, "__dataclass_fields__", None)
+    if fields is not None:
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    try:
+        return _COMPILER_PARAMS_CLS(**kwargs)
+    except TypeError:  # pragma: no cover - exotic signature drift
+        return None
+
+
+def vmem_scratch(shape, dtype=jnp.float32):
+    """A VMEM scratch ref, degrading to pl.MemoryRef without the TPU module."""
+    if pltpu is not None:
+        return pltpu.VMEM(shape, dtype)
+    return pl.MemoryRef(shape, dtype)  # pragma: no cover

@@ -37,6 +37,7 @@ from repro.configs import SHAPES, get_config, input_specs, runnable, REGISTRY
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (
     TrainConfig,
+    cost_dict,
     jit_prefill_step,
     jit_serve_step,
     jit_train_step,
@@ -181,16 +182,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if do_cost:
             try:
                 cost_compiled = _lower(cost_program=True).compile()
-                cost = cost_compiled.cost_analysis()
+                cost = cost_dict(cost_compiled.cost_analysis())
                 coll = collective_bytes(cost_compiled.as_text())
                 del cost_compiled
             except Exception as e:  # fall back to the scanned program
                 cost_meta = {"method": f"scanned-fallback ({e})"}
-                cost = compiled.cost_analysis()
+                cost = cost_dict(compiled.cost_analysis())
                 coll = collective_bytes(compiled.as_text())
         else:
             cost_meta = {"method": "scanned"}
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled.cost_analysis())
             coll = collective_bytes(compiled.as_text())
         t_cost = time.perf_counter() - t0
 

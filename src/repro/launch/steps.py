@@ -45,6 +45,14 @@ class TrainConfig:
     opt: AdamWConfig = AdamWConfig()
 
 
+def cost_dict(cost) -> Dict[str, float]:
+    """Normalise `Compiled.cost_analysis()` across JAX versions: newer
+    releases return one properties dict, older ones a one-element list."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 # ---------------------------------------------------------------- shardings
 def batch_logical_axes(batch_specs: Dict[str, Any]) -> Dict[str, Any]:
     out = {}
@@ -273,3 +281,97 @@ def jit_serve_step(model, mesh: Mesh, rules: ShardingRules, batch: int,
     step = make_serve_step(model, rules)
     return jax.jit(step, in_shardings=(p_shard, c_shard, tok_shard),
                    out_shardings=(None, c_shard), donate_argnums=(1,))
+
+
+# ------------------------------------------------- paged (continuous) serving
+def paged_pool_sharding(model, mesh: Mesh, rules: ShardingRules):
+    """NamedSharding of the paged KV pool: blocks replicated, kv_heads
+    sharded along 'model' exactly like the monolithic cache's head axis."""
+    axes = model.paged_cache_logical_axes()["k"]
+    return NamedSharding(mesh, rules.spec(axes))
+
+
+def jit_paged_prefill_step(model, mesh: Mesh, rules: ShardingRules,
+                           batch_specs, attn_backend: str = "xla",
+                           attn_config=None, interpret: bool = True):
+    """(params, batch, lengths) -> (logits (B,1,V), ks, vs) — the bucketed
+    prefill of the continuous runtime.  One compile per prompt-length bucket;
+    `lengths` picks each row's true last token out of the right-padding.
+    The attention backend/config is the plan's *prefill-stage* choice."""
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    b_shard = make_batch_shardings(mesh, rules, batch_specs)
+    len_shard = NamedSharding(mesh, rules.spec(("batch",)))
+
+    def prefill_step(params, batch, lengths):
+        with activation_rules(rules):
+            return model.prefill_kv(params, batch, lengths,
+                                    attn_backend=attn_backend,
+                                    attn_config=attn_config,
+                                    attn_interpret=interpret)
+
+    return jax.jit(prefill_step, in_shardings=(p_shard, b_shard, len_shard),
+                   out_shardings=None)
+
+
+def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
+                          attn_backend: str = "xla",
+                          interpret: bool = True):
+    """(params, k_pool, v_pool, block_tables, lengths, tokens)
+        -> (logits, k_pool, v_pool)
+
+    The continuous-batching decode program: batch dim = slot count, cache =
+    shared block pool.  All argument shapes are static in (slots, pool
+    blocks, table width), so the scheduler admits/retires requests by
+    editing the *data* — this program never recompiles mid-serve.  The
+    attention backend (XLA gather vs block-table Pallas kernel) is baked in
+    per the inference plan's decode-stage choice."""
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    pool_shard = paged_pool_sharding(model, mesh, rules)
+    slot_shard = NamedSharding(mesh, rules.spec(("batch",)))
+    row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+
+    def decode_step(params, k_pool, v_pool, block_tables, lengths, tokens):
+        with activation_rules(rules):
+            logits, k_pool, v_pool = model.decode_step_paged(
+                params, k_pool, v_pool, block_tables, lengths, tokens,
+                attn_backend=attn_backend, attn_interpret=interpret)
+        # greedy sampling fused into the step: one device program per token,
+        # no separate argmax dispatch on the host loop's critical path
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return nxt, k_pool, v_pool
+
+    return jax.jit(
+        decode_step,
+        in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
+                      row_shard),
+        out_shardings=(None, pool_shard, pool_shard),
+        donate_argnums=(1, 2),
+    )
+
+
+def jit_commit_prefill(model, mesh: Mesh, rules: ShardingRules):
+    """(k_pool, v_pool, ks, vs, block_ids) -> (k_pool, v_pool)
+
+    Scatter one prefilled request's per-layer K/V (L, 1, S_pad, Hkv, hd)
+    into the physical pool at `block_ids` (S_pad/block_size entries; padding
+    entries point at the null sink block).  Donates the pools; one compile
+    per prefill bucket."""
+    rules = prune_for_mesh(rules, mesh)
+    pool_shard = paged_pool_sharding(model, mesh, rules)
+
+    def commit(k_pool, v_pool, ks, vs, block_ids):
+        n_layers, _, block_size = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+        s_pad = ks.shape[2]
+        nb = s_pad // block_size
+        kb = ks[:, 0].reshape(n_layers, nb, block_size, *ks.shape[3:])
+        vb = vs[:, 0].reshape(n_layers, nb, block_size, *vs.shape[3:])
+        k_pool = k_pool.at[:, block_ids].set(kb.astype(k_pool.dtype))
+        v_pool = v_pool.at[:, block_ids].set(vb.astype(v_pool.dtype))
+        return k_pool, v_pool
+
+    return jax.jit(commit, in_shardings=(pool_shard, pool_shard, None, None,
+                                         None),
+                   out_shardings=(pool_shard, pool_shard),
+                   donate_argnums=(0, 1))

@@ -177,6 +177,9 @@ def attn_forward(
     causal: bool = True,
     kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     return_kv: bool = False,
+    backend: str = "xla",                   # 'pallas*' -> tuned flash kernel
+    backend_config: Optional[Dict[str, Any]] = None,
+    interpret: bool = True,
 ):
     b, s, _ = x.shape
     if kv_override is not None:             # cross-attention
@@ -188,7 +191,12 @@ def attn_forward(
         causal = False
     else:
         q, k, v = _project_qkv(p, cfg, x, positions)
-    out = _sdpa(q, k, v, causal, cfg.q_per_kv)
+    if backend.startswith("pallas") and kv_override is None:
+        from repro.kernels import ops as K
+        out = K.attention(q, k, v, causal=causal, config=backend_config,
+                          interpret=interpret)
+    else:
+        out = _sdpa(q, k, v, causal, cfg.q_per_kv)
     out = constrain(out, ("batch", None, "heads", None))
     y = dense(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.hd))
     if return_kv:
@@ -250,3 +258,61 @@ def attn_decode(
     out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache)
     y = dense(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
     return y, k_cache, v_cache
+
+
+# ---------------------------------------------------- paged (block-table) decode
+def attn_decode_paged(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                 # (B, 1, d) — B is the slot count
+    k_pool: jnp.ndarray,            # (num_blocks, block_size, Hkv, hd)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,      # (B, nbt) physical block ids per slot
+    lengths: jnp.ndarray,           # (B,) current context lengths (new token pos)
+    *,
+    backend: str = "xla",
+    interpret: bool = True,         # False compiles the kernel on real TPU
+):
+    """Decode attention against the *paged* KV pool.
+
+    The new token's K/V rows are scattered into each slot's current block
+    (inactive slots carry all-null tables and write harmlessly into the
+    reserved sink block 0), then attention runs either as an XLA
+    gather+einsum over the slot's logical view of the pool, or through the
+    block-table-aware Pallas kernel (`backend='pallas_attention'`) that
+    indirects via scalar-prefetched tables without gathering."""
+    b = x.shape[0]
+    block_size = k_pool.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None])
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(lengths[:, None, None], (b, 1, 3))
+        q, k_new, v_new = _project_qkv(p, cfg, x, pos3)
+
+    bidx = jnp.arange(b)
+    blk = block_tables[bidx, lengths // block_size]     # (B,) physical block
+    off = lengths % block_size
+    k_pool = k_pool.at[blk, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new[:, 0].astype(v_pool.dtype))
+
+    hkv, g = cfg.n_kv_heads, cfg.q_per_kv
+    if backend.startswith("pallas"):
+        from repro.kernels import ops as K
+        out = K.attention_decode_paged(
+            q.reshape(b, cfg.n_heads, cfg.hd), k_pool, v_pool,
+            lengths + 1, block_tables, interpret=interpret)
+        out = out.reshape(b, hkv, g, cfg.hd)
+    else:
+        # XLA lane: gather each slot's logical cache view from the pool.
+        nbt = block_tables.shape[1]
+        k_ctx = k_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
+        v_ctx = v_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
+        scale = 1.0 / np.sqrt(cfg.hd)
+        qg = q.reshape(b, hkv, g, cfg.hd)
+        logits = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                            k_ctx).astype(jnp.float32) * scale
+        pos = jnp.arange(nbt * block_size)[None, None, None, :]
+        logits = jnp.where(pos <= lengths[:, None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v_ctx.dtype)
+        out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_ctx)
+    y = dense(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
+    return y, k_pool, v_pool

@@ -266,6 +266,90 @@ class DecoderLM:
         new_cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
         return logits, new_cache
 
+    # ------------------------------------------------- paged serving path
+    def prefill_kv(self, params: Params, batch: Batch,
+                   lengths: Optional[jnp.ndarray] = None, *,
+                   attn_backend: str = "xla",
+                   attn_config: Optional[Dict[str, Any]] = None,
+                   attn_interpret: bool = True):
+        """Prefill for the paged runtime: run the (right-padded) prompts and
+        return per-layer K/V stacks instead of a monolithic cache, plus the
+        logits at each sequence's true last token (`lengths-1`) so bucket
+        padding never corrupts the first sampled token.
+
+        The attention backend/config is the *prefill-stage* choice of the
+        inference plan — chosen independently of the decode stage's.
+
+        Returns (logits (B, 1, V), ks (L, B, S, Hkv, hd), vs alike)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = self._positions(batch, b, s)
+
+        def body(x, bp):
+            h = _norm(cfg, bp["attn_norm"], x)
+            y, (k, v) = A.attn_forward(bp["attn"], cfg, h, positions=positions,
+                                       causal=True, return_kv=True,
+                                       backend=attn_backend,
+                                       backend_config=attn_config,
+                                       interpret=attn_interpret)
+            x = x + y
+            h = _norm(cfg, bp["mlp_norm"], x)
+            if cfg.family == "moe":
+                x = x + F.moe_apply(bp["moe"], cfg, h, cfg.act)
+            else:
+                x = x + F.mlp_apply(bp["mlp"], h, cfg.act)
+            return x, (k, v)
+
+        x, (ks, vs) = runmode.layer_scan(_remat(cfg, body), x, params["blocks"])
+        x = _norm(cfg, params["final_norm"], x)
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+            x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+                idx, (b, 1, x.shape[-1])), axis=1)
+        logits = unembed({"emb": params["lm_head"]["w"].T}, x_last)
+        return logits, ks, vs
+
+    def decode_step_paged(self, params: Params, k_pool: jnp.ndarray,
+                          v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                          lengths: jnp.ndarray, tokens: jnp.ndarray,
+                          *, attn_backend: str = "xla",
+                          attn_interpret: bool = True):
+        """One decode step over the slot batch against the paged KV pool.
+
+        k_pool/v_pool: (L, num_blocks, block_size, Hkv, hd); tokens: (B, 1).
+        Block tables and lengths have static shapes in the slot count, so
+        admitting a request into the in-flight batch is a pure data update —
+        the jitted program is reused as-is."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+        def body(x, layer):
+            bp, kp, vp = layer
+            h = _norm(cfg, bp["attn_norm"], x)
+            y, kp, vp = A.attn_decode_paged(
+                bp["attn"], cfg, h, kp, vp, block_tables, lengths,
+                backend=attn_backend, interpret=attn_interpret)
+            x = x + y
+            h = _norm(cfg, bp["mlp_norm"], x)
+            if cfg.family == "moe":
+                x = x + F.moe_apply(bp["moe"], cfg, h, cfg.act)
+            else:
+                x = x + F.mlp_apply(bp["mlp"], h, cfg.act)
+            return x, (kp, vp)
+
+        x, (ks, vs) = runmode.layer_scan(body, x, (params["blocks"], k_pool, v_pool))
+        x = _norm(cfg, params["final_norm"], x)
+        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        return logits, ks, vs
+
+    @staticmethod
+    def paged_cache_logical_axes():
+        ax = ("layers", None, None, "kv_heads", None)
+        return {"k": ax, "v": ax}
+
 
 # ===================================================================== Mamba2
 class MambaLM:

@@ -1,3 +1,25 @@
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import FixedBatchEngine, Request, ServeConfig, ServeEngine
+from repro.serve.kvcache import BlockAllocator, KVCacheConfig, PagedKVCache
+from repro.serve.metrics import ServeMetrics, percentile
+from repro.serve.router import PlanRouter, build_serve_graph, build_serve_plan
+from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = [
+    "BlockAllocator",
+    "ContinuousEngine",
+    "ContinuousScheduler",
+    "FixedBatchEngine",
+    "KVCacheConfig",
+    "PagedKVCache",
+    "PlanRouter",
+    "Request",
+    "RuntimeConfig",
+    "ServeConfig",
+    "ServeEngine",
+    "ServeMetrics",
+    "ServeRequest",
+    "build_serve_graph",
+    "build_serve_plan",
+    "percentile",
+]

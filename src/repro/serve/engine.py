@@ -1,16 +1,17 @@
-"""Batched serving engine (the paper is an *inference* system — this is the
-end-to-end driver deliverable).
+"""Serving engines.
 
-Request lifecycle: submit(prompt) -> queued -> batched prefill -> greedy
-decode loop -> done.  The engine runs fixed-size batches (padding the last
-batch) with two jit'd programs: `prefill_step` and `serve_step` — the same
-functions the multi-pod dry-run lowers, so what is served here is exactly
-what was compile-validated on the production mesh.
+`FixedBatchEngine` is the original synchronous drain loop: fixed-size
+batches, left-padded prompts, every request in a batch decodes the full
+`max_new_tokens`.  It remains as (a) the serving path for model families
+without a paged decode (mamba / hybrid / encdec state caches), and (b) the
+baseline the continuous-batching runtime is benchmarked against
+(`benchmarks/bench_serving.py`).
 
-WPK integration: when the model's matmul/attention backends were tuned by
-the WPK plan, the serve path inherits them; the e2e benchmark
-(`benchmarks/bench_e2e.py`) compares plans the way the paper's §3.4 compares
-WPK vs TensorRT.
+`ServeEngine` keeps the historical API (`submit` / `run` / `stats` /
+`throughput`) as a thin compatibility wrapper: when the model exposes the
+paged decode path (DecoderLM families) and no modality extras are in play it
+delegates to `repro.serve.runtime.ContinuousEngine`; otherwise it falls back
+to the fixed-batch loop.
 """
 
 from __future__ import annotations
@@ -43,7 +44,9 @@ class Request:
     latency_s: float = 0.0
 
 
-class ServeEngine:
+class FixedBatchEngine:
+    """The original fixed-batch drain loop (baseline engine)."""
+
     def __init__(self, model, params, mesh, rules: ShardingRules,
                  cfg: ServeConfig, extras: Optional[Dict[str, Any]] = None):
         self.model = model
@@ -118,6 +121,60 @@ class ServeEngine:
                     done.append(r)
                 self.stats["requests"] += n
                 self.stats["tokens_out"] += n * cfg.max_new_tokens
+        return done
+
+    def throughput(self) -> float:
+        return self.stats["tokens_out"] / max(1e-9, self.stats["decode_s"])
+
+
+class ServeEngine:
+    """Compatibility wrapper: historical API over the continuous runtime.
+
+    Models with a paged decode path are served by `ContinuousEngine`
+    (continuous batching + paged KV-cache); other families fall back to the
+    fixed-batch loop transparently."""
+
+    def __init__(self, model, params, mesh, rules: ShardingRules,
+                 cfg: ServeConfig, extras: Optional[Dict[str, Any]] = None):
+        self.cfg = cfg
+        self._continuous = (hasattr(model, "decode_step_paged")
+                            and not extras)
+        if self._continuous:
+            from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+            block = 16
+            rcfg = RuntimeConfig(
+                max_slots=cfg.batch_size,
+                block_size=block,
+                max_blocks_per_seq=max(1, -(-cfg.max_seq // block)),
+                max_new_tokens=cfg.max_new_tokens,
+                eos_id=cfg.eos_id,
+            )
+            self._engine = ContinuousEngine(model, params, mesh, rules, rcfg)
+        else:
+            self._engine = FixedBatchEngine(model, params, mesh, rules, cfg,
+                                            extras)
+        self.stats = {"requests": 0, "tokens_out": 0, "decode_s": 0.0,
+                      "prefill_s": 0.0}
+
+    def submit(self, prompt: np.ndarray) -> int:
+        return self._engine.submit(prompt)
+
+    def run(self) -> List[Request]:
+        if not self._continuous:
+            done = self._engine.run()
+            self.stats = self._engine.stats
+            return done
+        reqs = self._engine.run()
+        m = self._engine.metrics
+        self.stats["requests"] += m.requests_done
+        self.stats["tokens_out"] += m.tokens_out
+        # device-compute split, same semantics as FixedBatchEngine's stats
+        # (wall time incl. arrival idle lives in the runtime's own metrics)
+        self.stats["decode_s"] += m.decode_time_s
+        self.stats["prefill_s"] += m.prefill_time_s
+        self._engine.reset_metrics()  # next run() accumulates a fresh delta
+        done = [Request(r.rid, r.prompt, list(r.output), r.latency_s)
+                for r in sorted(reqs, key=lambda r: r.rid)]
         return done
 
     def throughput(self) -> float:

@@ -1,0 +1,138 @@
+"""Paged KV-cache manager for the continuous-batching runtime.
+
+The monolithic `(B, max_seq, Hkv, hd)` cache of the fixed-batch engine wastes
+HBM proportional to (longest sequence x batch): a 12-token request in a slot
+sized for 4k tokens pins 4k rows.  Here the cache is a pool of fixed-size
+*blocks* (`block_size` token rows each); a request owns a chain of physical
+block ids (its *block table*) and blocks return to the free list the moment
+the request completes — the vLLM PagedAttention layout, sized for the paper's
+serve path.
+
+Two layers of responsibility:
+
+  * `BlockAllocator` — pure host-side bookkeeping: free-list, per-request
+    block tables, alloc/free invariants.  Physical block 0 is reserved as the
+    *null sink*: slot-table entries of inactive slots and padding positions
+    point at it, so device-side scatters never need a mask branch.
+  * `PagedKVCache`  — the device tensors: `k`/`v` pools shaped
+    `(n_layers, num_blocks, block_size, n_kv_heads, hd)` plus helpers to
+    build the dense `(max_slots, blocks_per_seq)` block-table array the
+    jitted decode step consumes.  Shapes are static in the number of slots
+    and pool blocks, so admission NEVER triggers recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = 0  # reserved sink block — never allocated to a request
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    num_blocks: int = 64          # physical pool size (incl. the null block)
+    block_size: int = 16          # token rows per block
+    max_blocks_per_seq: int = 16  # bounds the per-slot block table width
+
+    @property
+    def max_seq(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+
+class BlockAllocator:
+    """Free-list allocation of physical blocks with per-request block tables."""
+
+    def __init__(self, cfg: KVCacheConfig):
+        if cfg.num_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the null sink)")
+        self.cfg = cfg
+        # block 0 reserved as the null sink
+        self._free: List[int] = list(range(cfg.num_blocks - 1, NULL_BLOCK, -1))
+        self.tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.cfg.num_blocks - 1) - len(self._free)
+
+    def occupancy(self) -> float:
+        usable = self.cfg.num_blocks - 1
+        return self.num_used / usable if usable else 0.0
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self._free)
+
+    # -------------------------------------------------------- alloc / free
+    def allocate(self, rid: int, n_blocks: int) -> List[int]:
+        """Claim `n_blocks` physical blocks for request `rid`."""
+        if rid in self.tables:
+            raise ValueError(f"request {rid} already holds blocks")
+        if not self.can_allocate(n_blocks):
+            raise MemoryError(
+                f"KV pool exhausted: want {n_blocks}, free {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(n_blocks)]
+        self.tables[rid] = blocks
+        return blocks
+
+    def extend(self, rid: int, n_tokens_total: int) -> bool:
+        """Grow rid's table to cover `n_tokens_total`; False if pool is dry."""
+        table = self.tables[rid]
+        need = self.cfg.blocks_for(n_tokens_total) - len(table)
+        if need <= 0:
+            return True
+        if need > len(self._free):
+            return False
+        for _ in range(need):
+            table.append(self._free.pop())
+        return True
+
+    def free(self, rid: int) -> int:
+        """Return all of rid's blocks to the free list."""
+        blocks = self.tables.pop(rid)
+        self._free.extend(reversed(blocks))
+        return len(blocks)
+
+    def check_invariants(self) -> None:
+        """Every block is either free or owned by exactly one request."""
+        owned = [b for t in self.tables.values() for b in t]
+        assert NULL_BLOCK not in owned, "null block leaked into a table"
+        assert NULL_BLOCK not in self._free, "null block leaked into free list"
+        combined = sorted(owned + self._free)
+        assert combined == list(range(1, self.cfg.num_blocks)), (
+            f"block accounting broken: {combined}")
+        assert len(set(owned)) == len(owned), "block double-owned"
+
+
+class PagedKVCache:
+    """Device-side paged K/V pools plus the allocator."""
+
+    def __init__(self, cfg: KVCacheConfig, n_layers: int, n_kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.alloc = BlockAllocator(cfg)
+        shape = (n_layers, cfg.num_blocks, cfg.block_size, n_kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+
+    def table_array(self, slot_rids: List[Optional[int]]) -> np.ndarray:
+        """Dense (max_slots, max_blocks_per_seq) int32 block-table array for
+        the jitted decode step; unused entries point at the null sink."""
+        out = np.full((len(slot_rids), self.cfg.max_blocks_per_seq),
+                      NULL_BLOCK, np.int32)
+        for s, rid in enumerate(slot_rids):
+            if rid is None:
+                continue
+            table = self.alloc.tables[rid]
+            out[s, : len(table)] = table
+        return out

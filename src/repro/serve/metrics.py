@@ -1,0 +1,83 @@
+"""Serving metrics: latency percentiles, TTFT, throughput, cache occupancy.
+
+Everything is recorded against the engine's own clock (wall time for real
+serving, virtual time for simulated workloads) so the same metrics object
+backs both the runtime and the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    k = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    ttfts_s: List[float] = dataclasses.field(default_factory=list)
+    tokens_out: int = 0
+    requests_done: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    # device-compute time (always wall-clock, even under a virtual engine
+    # clock) — comparable with FixedBatchEngine's prefill_s/decode_s split
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    # per-decode-step samples
+    slot_occupancy: List[float] = dataclasses.field(default_factory=list)
+    cache_occupancy: List[float] = dataclasses.field(default_factory=list)
+    start_time: float = 0.0
+    end_time: float = 0.0
+
+    # ----------------------------------------------------------- recording
+    def record_step(self, active_slots: int, max_slots: int,
+                    cache_occ: float) -> None:
+        self.decode_steps += 1
+        self.slot_occupancy.append(active_slots / max(1, max_slots))
+        self.cache_occupancy.append(cache_occ)
+
+    def record_first_token(self, ttft_s: float) -> None:
+        self.ttfts_s.append(ttft_s)
+
+    def record_completion(self, latency_s: float, n_tokens: int) -> None:
+        self.requests_done += 1
+        self.tokens_out += n_tokens
+        self.latencies_s.append(latency_s)
+
+    # ------------------------------------------------------------- summary
+    @property
+    def wall_s(self) -> float:
+        return max(1e-9, self.end_time - self.start_time)
+
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": float(self.requests_done),
+            "tokens_out": float(self.tokens_out),
+            "wall_s": self.wall_s,
+            "tokens_per_s": self.tokens_per_s(),
+            "latency_p50_s": percentile(self.latencies_s, 50),
+            "latency_p95_s": percentile(self.latencies_s, 95),
+            "ttft_p50_s": percentile(self.ttfts_s, 50),
+            "ttft_p95_s": percentile(self.ttfts_s, 95),
+            "decode_steps": float(self.decode_steps),
+            "prefills": float(self.prefills),
+            "prefill_time_s": self.prefill_time_s,
+            "decode_time_s": self.decode_time_s,
+            "slot_occupancy_mean": (sum(self.slot_occupancy)
+                                    / max(1, len(self.slot_occupancy))),
+            "cache_occupancy_mean": (sum(self.cache_occupancy)
+                                     / max(1, len(self.cache_occupancy))),
+            "cache_occupancy_max": max(self.cache_occupancy, default=0.0),
+        }

@@ -1,0 +1,125 @@
+"""Plan-aware backend routing for the serving runtime.
+
+The WPK `InferencePlan` is per-operator *and per-shape*: the matmuls and
+attention of a prefill (long query, batch 1) live at a very different point
+of the roofline than the decode step (query length 1, batch = slot count).
+The old engine "inherited" one plan for both; here the serve graph is built
+with BOTH shape families as distinct named nodes —
+
+    prefill.attention   decode.attention
+    prefill.qkv_proj    decode.qkv_proj
+    prefill.mlp_up      decode.mlp_up
+    prefill.lm_head     decode.lm_head
+
+— and `selection.select` races the XLA lane against every applicable tuned
+Pallas template for each of them separately.  `PlanRouter` then answers the
+runtime's dispatch questions ("which attention backend for decode?", "which
+matmul config for prefill?") by stage-qualified lookup into that plan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro import hw
+from repro.configs.base import ModelConfig
+from repro.core.graph import Graph
+from repro.core.plan import InferencePlan, OpChoice
+from repro.core.selection import select
+from repro.core.search.tuner import Tuner
+
+STAGES = ("prefill", "decode")
+
+
+def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
+                      max_seq: int, dtype: str = "float32") -> Graph:
+    """The serve-time operator set as a Graph with stage-qualified names."""
+    g = Graph("serve")
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    # ---- prefill stage: one request, `prefill_len` query tokens
+    xp = g.add_input("x_prefill", (1, prefill_len, d), dtype)
+    wq = g.add_input("w_qkv", (d, (h + 2 * hkv) * hd), dtype)
+    qkv_p = g.add_node("matmul", [xp, wq], (1, prefill_len, (h + 2 * hkv) * hd),
+                       name="prefill.qkv_proj")
+    qp = g.add_input("q_prefill", (1, prefill_len, h, hd), dtype)
+    kp = g.add_input("k_prefill", (1, prefill_len, hkv, hd), dtype)
+    att_p = g.add_node("attention", [qp, kp, kp], (1, prefill_len, h, hd),
+                       name="prefill.attention")
+    wu = g.add_input("w_up", (d, cfg.d_ff), dtype)
+    mlp_p = g.add_node("matmul", [xp, wu], (1, prefill_len, cfg.d_ff),
+                       name="prefill.mlp_up")
+    wl = g.add_input("w_lm", (d, cfg.vocab), dtype)
+    lm_p = g.add_node("matmul", [xp, wl], (1, prefill_len, cfg.vocab),
+                      name="prefill.lm_head")
+
+    # ---- decode stage: `slots` requests, one query token each, long cache
+    xd = g.add_input("x_decode", (slots, 1, d), dtype)
+    qkv_d = g.add_node("matmul", [xd, wq], (slots, 1, (h + 2 * hkv) * hd),
+                       name="decode.qkv_proj")
+    qd = g.add_input("q_decode", (slots, 1, h, hd), dtype)
+    kd = g.add_input("k_decode", (slots, max_seq, hkv, hd), dtype)
+    att_d = g.add_node("attention", [qd, kd, kd], (slots, 1, h, hd),
+                       name="decode.attention")
+    mlp_d = g.add_node("matmul", [xd, wu], (slots, 1, cfg.d_ff),
+                       name="decode.mlp_up")
+    lm_d = g.add_node("matmul", [xd, wl], (slots, 1, cfg.vocab),
+                      name="decode.lm_head")
+
+    g.set_outputs([qkv_p, att_p, mlp_p, lm_p, qkv_d, att_d, mlp_d, lm_d])
+    return g
+
+
+def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
+                     max_seq: int, chip: hw.Chip = hw.TPU_V5E,
+                     tuner: Optional[Tuner] = None,
+                     dtype: str = "bfloat16") -> InferencePlan:
+    """Tune the serve graph and return its stage-qualified InferencePlan."""
+    g = build_serve_graph(cfg, prefill_len=prefill_len, slots=slots,
+                          max_seq=max_seq)
+    return select(g, tuner=tuner, chip=chip, dtype=dtype)
+
+
+class PlanRouter:
+    """Answers serve-time dispatch questions from a stage-qualified plan.
+
+    With no plan (or no matching choice) every query falls back to the XLA
+    lane — the runtime stays correct, just untuned."""
+
+    def __init__(self, plan: Optional[InferencePlan] = None):
+        self.plan = plan
+
+    def _lookup(self, stage: str, op: str) -> Optional[OpChoice]:
+        if self.plan is None:
+            return None
+        # exact stage-qualified name first, then any stage-prefixed op match
+        choice = self.plan.choice(f"{stage}.{op}")
+        if choice is not None:
+            return choice
+        for name, c in self.plan.choices.items():
+            if name.startswith(f"{stage}.") and name.split(".", 1)[1].startswith(op):
+                return c
+        return None
+
+    def attention_backend(self, stage: str) -> Tuple[str, Dict[str, Any]]:
+        """-> ('xla' | 'pallas_attention', tuned config)."""
+        assert stage in STAGES, stage
+        c = self._lookup(stage, "attention")
+        if c is None or c.backend == "xla":
+            return "xla", {}
+        return "pallas_attention", dict(c.config)
+
+    def matmul_config(self, stage: str,
+                      which: str = "qkv_proj") -> Tuple[str, Dict[str, Any]]:
+        """-> ('xla' | 'pallas_matmul', tuned config) for a stage matmul."""
+        assert stage in STAGES, stage
+        c = self._lookup(stage, which)
+        if c is None or c.backend == "xla":
+            return "xla", {}
+        return "pallas_matmul", dict(c.config)
+
+    def describe(self) -> Dict[str, str]:
+        """Stage-qualified op -> chosen backend (for logs and benches)."""
+        if self.plan is None:
+            return {}
+        return {name: c.backend for name, c in sorted(self.plan.choices.items())}

@@ -1,0 +1,252 @@
+"""Continuous-batching serving runtime (tentpole of the serving subsystem).
+
+Request lifecycle:
+
+    submit() -> waiting -> [scheduler admits into a free slot]
+             -> bucketed prefill (B=1, right-padded, KV committed into the
+                paged pool at the slot's block table)
+             -> joins the in-flight decode batch at the NEXT step
+             -> greedy decode, one token per engine step, retiring on
+                eos/max_new -> blocks + slot freed, metrics recorded.
+
+Key properties the fixed-batch `ServeEngine` lacks:
+
+  * requests are admitted into *running* decode batches — a new arrival
+    waits for one decode step, not for the whole previous batch to drain;
+  * no cross-request padding: per-slot lengths/block-tables mean a 12-token
+    prompt next to a 200-token prompt costs 12 tokens of KV;
+  * the decode program is compiled ONCE (static slot/pool shapes); prefill
+    compiles per power-of-two bucket, bounded by log2(max_seq) programs;
+  * the tuned `InferencePlan` drives dispatch: prefill and decode attention
+    backends are chosen separately by `PlanRouter` from a stage-qualified
+    serve plan (see `repro.serve.router`).
+
+The engine clock is injectable (`now_fn`) so benchmarks can replay Poisson
+arrival traces in wall time or virtual time with identical scheduling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules
+from repro.launch.steps import (
+    jit_commit_prefill,
+    jit_paged_decode_step,
+    jit_paged_prefill_step,
+)
+from repro.serve.kvcache import NULL_BLOCK, KVCacheConfig, PagedKVCache
+from repro.serve.metrics import ServeMetrics
+from repro.serve.router import PlanRouter
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    max_slots: int = 4                # decode batch width (compiled once)
+    block_size: int = 16              # KV block granularity (token rows)
+    max_blocks_per_seq: int = 8       # per-request table width
+    num_blocks: Optional[int] = None  # pool size; default: slots*table + null
+    max_new_tokens: int = 32          # default generation budget
+    eos_id: int = -1                  # -1: never stop early
+    interpret: bool = True            # False: compile Pallas lanes on real TPU
+
+    @property
+    def max_seq(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+    def kv_config(self) -> KVCacheConfig:
+        nb = self.num_blocks
+        if nb is None:
+            nb = self.max_slots * self.max_blocks_per_seq + 1
+        return KVCacheConfig(num_blocks=nb, block_size=self.block_size,
+                             max_blocks_per_seq=self.max_blocks_per_seq)
+
+
+class ContinuousEngine:
+    """Slot-based continuous-batching engine over the paged KV-cache."""
+
+    def __init__(self, model, params, mesh, rules: ShardingRules,
+                 cfg: RuntimeConfig, router: Optional[PlanRouter] = None,
+                 now_fn: Optional[Callable[[], float]] = None):
+        if not hasattr(model, "decode_step_paged"):
+            raise TypeError(
+                f"{type(model).__name__} has no paged decode path; use the "
+                "fixed-batch ServeEngine for this family")
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        self.cfg = cfg
+        self.router = router or PlanRouter(None)
+        self.now_fn = now_fn or time.perf_counter
+        mcfg = model.cfg
+        self.kv_cfg = cfg.kv_config()
+        self.cache = PagedKVCache(self.kv_cfg, mcfg.n_layers, mcfg.n_kv_heads,
+                                  mcfg.hd, jnp.dtype(mcfg.dtype))
+        self.scheduler = ContinuousScheduler(cfg.max_slots, self.kv_cfg,
+                                             self.cache.alloc)
+        self.metrics = ServeMetrics()
+        self._rid = 0
+        self._done: List[ServeRequest] = []
+        # per-slot host state
+        self._lengths = np.zeros((cfg.max_slots,), np.int32)
+        self._last_tok = np.zeros((cfg.max_slots,), np.int32)
+        # compiled programs — prefill and decode attention backends come
+        # from the plan's respective stage choices.  (The paged decode
+        # kernel's block geometry is fixed by the pool, so its stage choice
+        # contributes only the backend; the prefill flash kernel also takes
+        # the tuned block_q/block_kv config.  Stage matmul choices are
+        # recorded in the plan but not yet dispatched — see ROADMAP.)
+        decode_backend, _ = self.router.attention_backend("decode")
+        self._decode = jit_paged_decode_step(model, mesh, rules,
+                                             attn_backend=decode_backend,
+                                             interpret=cfg.interpret)
+        self._prefill_choice = self.router.attention_backend("prefill")
+        self._prefills: Dict[int, Any] = {}   # bucket len -> jitted prefill
+        self._commit = jit_commit_prefill(model, mesh, rules)
+
+    # ------------------------------------------------------------ interface
+    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
+               arrival_time: Optional[float] = None) -> int:
+        self._rid += 1
+        if max_new_tokens is None:
+            max_new_tokens = self.cfg.max_new_tokens
+        req = ServeRequest(
+            rid=self._rid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            arrival_time=(arrival_time if arrival_time is not None
+                          else self.now_fn()))
+        self.scheduler.submit(req)
+        return self._rid
+
+    def run(self) -> List[ServeRequest]:
+        """Step until every submitted request completes; returns them in
+        completion order.  Idle steps (all slots empty, next arrival still
+        in the future) back off briefly instead of spinning."""
+        if self.metrics.start_time == 0.0:
+            self.metrics.start_time = self.now_fn()
+        with self.mesh:
+            while self.scheduler.has_work:
+                if not self.step():
+                    time.sleep(2e-4)
+        self.metrics.end_time = self.now_fn()
+        done, self._done = self._done, []
+        return done
+
+    def reset_metrics(self) -> None:
+        """Fresh metrics (e.g. after a warm-up pass); compiled programs and
+        cache state are kept."""
+        self.metrics = ServeMetrics()
+
+    # ----------------------------------------------------------- internals
+    def _bucket(self, prompt_len: int) -> int:
+        """Power-of-two block-count bucket (>= 1 block) covering the prompt:
+        at most log2(max_blocks_per_seq)+1 prefill programs ever compile."""
+        bs = self.kv_cfg.block_size
+        nb = max(1, -(-prompt_len // bs))
+        p = 1
+        while p < nb:
+            p *= 2
+        return min(p, self.kv_cfg.max_blocks_per_seq) * bs
+
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefills.get(bucket)
+        if fn is None:
+            specs = {"tokens": jax.ShapeDtypeStruct((1, bucket), jnp.int32)}
+            backend, config = self._prefill_choice
+            fn = jit_paged_prefill_step(self.model, self.mesh, self.rules,
+                                        specs, attn_backend=backend,
+                                        attn_config=config,
+                                        interpret=self.cfg.interpret)
+            self._prefills[bucket] = fn
+        return fn
+
+    def _prefill(self, req: ServeRequest, now: float) -> None:
+        plen = req.prompt_len
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt                       # right-pad
+        lengths = jnp.asarray([plen], jnp.int32)
+        t0 = time.perf_counter()
+        logits, ks, vs = self._prefill_fn(bucket)(
+            self.params, {"tokens": jnp.asarray(toks)}, lengths)
+
+        # commit the prompt KV into this request's blocks
+        table = self.cache.alloc.tables[req.rid]
+        nb = bucket // self.kv_cfg.block_size
+        ids = np.full((nb,), NULL_BLOCK, np.int32)
+        n_real = min(nb, len(table))
+        ids[:n_real] = table[:n_real]
+        self.cache.k, self.cache.v = self._commit(
+            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+        self.metrics.prefill_time_s += time.perf_counter() - t0
+
+        first = int(jnp.argmax(logits[0, -1], -1))
+        req.output.append(first)
+        req.first_token_time = self.now_fn()
+        self.metrics.record_first_token(req.first_token_time - req.arrival_time)
+        self.metrics.prefills += 1
+        slot = req.slot
+        self._lengths[slot] = plen
+        self._last_tok[slot] = first
+        if self._finished(req):
+            self.scheduler.retire(req, self.now_fn())
+            self._reset_slot(slot)
+            self._complete(req)
+
+    def _reset_slot(self, slot: int) -> None:
+        # stale lengths on a freed slot would index past the (all-null)
+        # block table; zeroed state keeps every inactive slot's writes
+        # pinned to the sink block.
+        self._lengths[slot] = 0
+        self._last_tok[slot] = 0
+
+    def _finished(self, req: ServeRequest) -> bool:
+        if len(req.output) >= req.max_new_tokens:
+            return True
+        return self.cfg.eos_id >= 0 and req.output[-1] == self.cfg.eos_id
+
+    def _complete(self, req: ServeRequest) -> None:
+        self.metrics.record_completion(req.latency_s, len(req.output))
+        self._done.append(req)
+
+    def step(self) -> bool:
+        """One engine step: admit + prefill new arrivals, then one decode
+        step over every active slot.  Returns False when nothing ran."""
+        now = self.now_fn()
+        admitted = self.scheduler.admit(now)
+        for req in admitted:
+            self._prefill(req, now)
+
+        active = [r for r in self.scheduler.slots if r is not None]
+        if not active:
+            return bool(admitted)
+        bt = jnp.asarray(self.cache.table_array(self.scheduler.slot_rids()))
+        lengths = jnp.asarray(self._lengths)
+        tokens = jnp.asarray(self._last_tok[:, None])
+        t0 = time.perf_counter()
+        nxt_dev, self.cache.k, self.cache.v = self._decode(
+            self.params, self.cache.k, self.cache.v, bt, lengths, tokens)
+        nxt = np.asarray(nxt_dev, np.int32)
+        self.metrics.decode_time_s += time.perf_counter() - t0
+
+        now = self.now_fn()
+        self.metrics.record_step(len(active), self.cfg.max_slots,
+                                 self.cache.alloc.occupancy())
+        for req in active:
+            slot = req.slot
+            req.output.append(int(nxt[slot]))
+            self._lengths[slot] += 1
+            self._last_tok[slot] = nxt[slot]
+            if self._finished(req):
+                self.scheduler.retire(req, now)
+                self._reset_slot(slot)
+                self._complete(req)
+        return True

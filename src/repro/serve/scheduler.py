@@ -1,0 +1,144 @@
+"""Continuous-batching scheduler: slot-based admission into in-flight batches.
+
+The decode program is compiled once for a fixed slot count; a *slot* is one
+row of that batch.  Each engine step the scheduler:
+
+  1. retires finished requests (slots + KV blocks return to the pool),
+  2. admits waiting requests into free slots — FIFO, gated on the paged
+     KV-cache having enough free blocks for the request's *worst case*
+     KV footprint (see `kv_rows`), so an admitted request can never die
+     of cache exhaustion mid-decode and no preemption machinery is needed,
+  3. hands the engine the set of newly admitted requests to prefill.
+
+Requests that arrive while all slots are busy (or the pool is dry) simply
+wait — overload degrades to queueing delay, never to an error.  Per-slot
+position tracking is length-based (no left-padding anywhere): slot i's next
+token lands at position `lengths[i]`, independent of every other slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.serve.kvcache import BlockAllocator, KVCacheConfig
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # lifecycle timestamps (engine clock)
+    admitted_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # generation state
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def done(self) -> bool:
+        return self.finish_time is not None
+
+    @property
+    def latency_s(self) -> float:
+        return (self.finish_time or 0.0) - self.arrival_time
+
+    @property
+    def ttft_s(self) -> float:
+        return (self.first_token_time or 0.0) - self.arrival_time
+
+
+class ContinuousScheduler:
+    """Admission control over `max_slots` decode slots + the block pool."""
+
+    def __init__(self, max_slots: int, kv_cfg: KVCacheConfig,
+                 alloc: BlockAllocator):
+        self.max_slots = max_slots
+        self.kv_cfg = kv_cfg
+        self.alloc = alloc
+        self.waiting: Deque[ServeRequest] = deque()
+        self.slots: List[Optional[ServeRequest]] = [None] * max_slots
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def has_work(self) -> bool:
+        return self.num_active > 0 or self.num_waiting > 0
+
+    def slot_rids(self) -> List[Optional[int]]:
+        return [r.rid if r is not None else None for r in self.slots]
+
+    # ----------------------------------------------------------- lifecycle
+    @staticmethod
+    def kv_rows(req: ServeRequest) -> int:
+        """KV rows a request can ever occupy: the prompt plus every
+        generated token except the last (which is emitted but never fed
+        back through a decode step, so its K/V row is never written)."""
+        return req.prompt_len + req.max_new_tokens - 1
+
+    def submit(self, req: ServeRequest) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1")
+        if self.kv_rows(req) > self.kv_cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + "
+                f"max_new {req.max_new_tokens} exceeds max_seq "
+                f"{self.kv_cfg.max_seq}")
+        need = self.kv_cfg.blocks_for(self.kv_rows(req))
+        usable = self.kv_cfg.num_blocks - 1
+        if need > usable:
+            # would never be admittable even with an empty pool — reject now
+            # instead of letting the engine wait on it forever
+            raise ValueError(
+                f"request {req.rid}: needs {need} KV blocks but the pool "
+                f"only has {usable}")
+        self.waiting.append(req)
+
+    def admit(self, now: float) -> List[ServeRequest]:
+        """Move waiting requests into free slots; returns the newly admitted
+        (to be prefilled by the engine).  FIFO with head-of-line blocking:
+        a request too large for the current free pool also holds back the
+        requests behind it, preserving arrival order fairness."""
+        admitted: List[ServeRequest] = []
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            if req.arrival_time > now:
+                break  # not yet arrived (simulated-arrival workloads)
+            need = self.kv_cfg.blocks_for(self.kv_rows(req))
+            if not self.alloc.can_allocate(need):
+                break
+            self.waiting.popleft()
+            self.alloc.allocate(req.rid, need)
+            req.slot = slot
+            req.admitted_time = now
+            self.slots[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def retire(self, req: ServeRequest, now: float) -> None:
+        """Release the request's slot and KV blocks."""
+        req.finish_time = now
+        self.alloc.free(req.rid)
+        assert req.slot is not None and self.slots[req.slot] is req
+        self.slots[req.slot] = None
+        req.slot = None

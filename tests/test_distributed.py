@@ -117,7 +117,8 @@ _SUBPROC = textwrap.dedent("""
         batch = input_specs(cfg, shape)
         fn = jit_train_step(model, mesh, rules, TrainConfig(microbatches=2), batch)
         compiled = fn.lower(params, opt, batch).compile()
-        cost = compiled.cost_analysis()
+        from repro.launch.steps import cost_dict
+        cost = cost_dict(compiled.cost_analysis())
         print(json.dumps({"flops": float(cost.get("flops", 0)),
                           "ndev": len(jax.devices())}))
 """)

@@ -3,6 +3,9 @@ cache (§3.3), constraint validity (hypothesis property)."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro import hw

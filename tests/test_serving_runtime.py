@@ -1,0 +1,259 @@
+"""Continuous-batching runtime: paged KV-cache invariants, scheduler
+admission under overload, mid-flight admission without recompilation, and
+paged-vs-monolithic decode equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve.kvcache import NULL_BLOCK, BlockAllocator, KVCacheConfig, PagedKVCache
+from repro.serve.metrics import percentile
+from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+
+
+# ------------------------------------------------------------ block allocator
+def test_alloc_free_invariants():
+    cfg = KVCacheConfig(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    alloc = BlockAllocator(cfg)
+    assert alloc.num_free == 8          # block 0 reserved as null sink
+    a = alloc.allocate(1, 3)
+    b = alloc.allocate(2, 2)
+    assert NULL_BLOCK not in a + b
+    assert set(a).isdisjoint(b)
+    alloc.check_invariants()
+    assert alloc.num_used == 5
+    assert alloc.occupancy() == pytest.approx(5 / 8)
+    alloc.free(1)
+    alloc.check_invariants()
+    assert alloc.num_free == 6
+    alloc.free(2)
+    assert alloc.num_free == 8
+    alloc.check_invariants()
+
+
+def test_alloc_exhaustion_and_double_alloc():
+    cfg = KVCacheConfig(num_blocks=5, block_size=4)
+    alloc = BlockAllocator(cfg)
+    alloc.allocate(1, 3)
+    assert not alloc.can_allocate(2)
+    with pytest.raises(MemoryError):
+        alloc.allocate(2, 2)
+    with pytest.raises(ValueError):
+        alloc.allocate(1, 1)            # rid already holds blocks
+    alloc.check_invariants()
+
+
+def test_alloc_extend_and_randomized_churn():
+    cfg = KVCacheConfig(num_blocks=17, block_size=4, max_blocks_per_seq=8)
+    alloc = BlockAllocator(cfg)
+    alloc.allocate(7, 1)
+    assert alloc.extend(7, 9)           # 9 tokens -> 3 blocks total
+    assert len(alloc.tables[7]) == 3
+    assert alloc.extend(7, 9)           # no-op growth stays True
+    alloc.free(7)
+
+    rng = np.random.default_rng(0)
+    live = {}
+    for step in range(200):
+        if live and (rng.random() < 0.4 or alloc.num_free < 2):
+            rid = live.pop(list(live)[int(rng.integers(len(live)))])
+            alloc.free(rid)
+        else:
+            rid = step + 100
+            n = int(rng.integers(1, 4))
+            if alloc.can_allocate(n):
+                alloc.allocate(rid, n)
+                live[rid] = rid
+        alloc.check_invariants()
+
+
+def test_table_array_null_padding():
+    cfg = KVCacheConfig(num_blocks=9, block_size=2, max_blocks_per_seq=4)
+    cache = PagedKVCache(cfg, n_layers=1, n_kv_heads=1, head_dim=4)
+    blocks = cache.alloc.allocate(5, 2)
+    arr = cache.table_array([5, None])
+    assert arr.shape == (2, 4)
+    assert list(arr[0, :2]) == blocks
+    assert (arr[0, 2:] == NULL_BLOCK).all()
+    assert (arr[1] == NULL_BLOCK).all()
+
+
+# --------------------------------------------------------------- scheduler
+def _req(rid, plen, max_new=4, arrival=0.0):
+    return ServeRequest(rid=rid, prompt=np.zeros(plen, np.int32),
+                        max_new_tokens=max_new, arrival_time=arrival)
+
+
+def test_scheduler_admission_under_overload():
+    kv = KVCacheConfig(num_blocks=9, block_size=4, max_blocks_per_seq=8)
+    alloc = BlockAllocator(kv)
+    sched = ContinuousScheduler(max_slots=2, kv_cfg=kv, alloc=alloc)
+    for rid in range(1, 7):
+        sched.submit(_req(rid, plen=8, max_new=4))   # 3 blocks each
+    admitted = sched.admit(now=1.0)
+    # 2 slots but only 8 usable blocks -> 2 requests of 3 blocks fit
+    assert [r.rid for r in admitted] == [1, 2]
+    assert sched.num_waiting == 4
+    assert sched.admit(now=2.0) == []                # full: queue, don't fail
+    sched.retire(sched.slots[0], now=3.0)
+    alloc.check_invariants()
+    nxt = sched.admit(now=3.0)
+    assert [r.rid for r in nxt] == [3]               # FIFO order preserved
+    assert sched.slots[0].rid == 3
+
+
+def test_scheduler_rejects_oversized_request():
+    kv = KVCacheConfig(num_blocks=9, block_size=4, max_blocks_per_seq=2)
+    sched = ContinuousScheduler(2, kv, BlockAllocator(kv))
+    with pytest.raises(ValueError):
+        sched.submit(_req(1, plen=8, max_new=4))     # 12 > max_seq 8
+
+
+def test_scheduler_rejects_request_larger_than_pool():
+    # max_seq allows 5 blocks but the pool only holds 3 usable ones: the
+    # request could never be admitted, so submit() must fail fast instead
+    # of leaving the engine waiting forever.
+    kv = KVCacheConfig(num_blocks=4, block_size=4, max_blocks_per_seq=8)
+    sched = ContinuousScheduler(2, kv, BlockAllocator(kv))
+    with pytest.raises(ValueError, match="KV blocks"):
+        sched.submit(_req(1, plen=16, max_new=4))    # needs 5 > 3 usable
+
+
+def test_scheduler_defers_future_arrivals():
+    kv = KVCacheConfig(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    sched = ContinuousScheduler(2, kv, BlockAllocator(kv))
+    sched.submit(_req(1, 4, arrival=5.0))
+    assert sched.admit(now=1.0) == []
+    assert [r.rid for r in sched.admit(now=5.0)] == [1]
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 95) == 0.0
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 50) == pytest.approx(50.0, abs=1.0)
+    assert percentile(xs, 95) == pytest.approx(95.0, abs=1.0)
+
+
+# ------------------------------------------------------------ engine e2e
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                           vocab=97)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reference_greedy(model, params, prompt, n_new, max_seq=64):
+    toks = jnp.asarray(prompt[None], jnp.int32)
+    logits, cache = model.prefill(params, {"tokens": toks}, max_seq=max_seq)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_new - 1):
+        nxt = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, cache, nxt)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def test_midflight_admission_no_recompile_and_exact_decode(tiny_lm):
+    """A request admitted into an in-flight decode batch must (a) not
+    trigger recompilation of the decode program and (b) leave every
+    request's greedy output identical to the sequential reference."""
+    cfg, model, params = tiny_lm
+    eng = ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=2, block_size=8, max_blocks_per_seq=6,
+                      max_new_tokens=10))
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(0, cfg.vocab, size=11).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab, size=17).astype(np.int32)
+
+    with eng.mesh:
+        eng.submit(p1)
+        for _ in range(4):                 # p1 alone in flight
+            eng.step()
+        assert eng.scheduler.num_active == 1
+        n_compiles = eng._decode._cache_size()
+        eng.submit(p2)                     # joins mid-decode
+        while eng.scheduler.has_work:
+            eng.step()
+    assert eng._decode._cache_size() == n_compiles == 1
+    done = {r.rid: r.output for r in eng._done}
+    assert done[1] == _reference_greedy(model, params, p1, 10)
+    assert done[2] == _reference_greedy(model, params, p2, 10)
+    eng.cache.alloc.check_invariants()
+    assert eng.cache.alloc.num_used == 0   # everything returned to the pool
+
+
+def test_engine_overload_queues_and_completes(tiny_lm):
+    """More requests than slots+blocks: extras wait, everyone finishes."""
+    cfg, model, params = tiny_lm
+    eng = ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=2, block_size=8, max_blocks_per_seq=3,
+                      num_blocks=7, max_new_tokens=6))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+               for _ in range(5)]
+    for p in prompts:
+        eng.submit(p)
+    assert eng.scheduler.num_waiting == 5
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.output) == 6 for r in done)
+    s = eng.metrics.summary()
+    assert s["requests"] == 5
+    assert s["tokens_out"] == 30
+    assert 0 < s["cache_occupancy_max"] <= 1.0
+    eng.cache.alloc.check_invariants()
+
+
+def test_serve_engine_wrapper_stats_across_cycles(tiny_lm):
+    """Repeated submit/run cycles through the compat wrapper must count
+    each request exactly once."""
+    from repro.serve import ServeConfig, ServeEngine
+    cfg, model, params = tiny_lm
+    eng = ServeEngine(model, params, single_device_mesh(), DEFAULT_RULES,
+                      ServeConfig(batch_size=2, max_seq=32, max_new_tokens=4))
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, size=6))
+        eng.submit(rng.integers(0, cfg.vocab, size=6))
+        done = eng.run()
+        assert len(done) == 2
+    assert eng.stats["requests"] == 6
+    assert eng.stats["tokens_out"] == 24
+
+
+def test_paged_pallas_matches_xla_gather():
+    """The block-table Pallas kernel must agree with the XLA gather lane
+    (f32 pools -> tight tolerance)."""
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(0)
+    b, h, hkv, d, bs, nbt, nb = 3, 4, 2, 16, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, bs, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, bs, hkv, d)), jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: b * nbt].reshape(b, nbt))
+    lengths = jnp.asarray([5, 19, 32], jnp.int32)
+
+    out = K.attention_decode_paged(q, kp, vp, lengths, tables)
+
+    # reference: gather + masked softmax per KV-head group
+    k_ctx = np.asarray(kp)[np.asarray(tables)].reshape(b, nbt * bs, hkv, d)
+    v_ctx = np.asarray(vp)[np.asarray(tables)].reshape(b, nbt * bs, hkv, d)
+    qn = np.asarray(q).reshape(b, hkv, h // hkv, d)
+    s = np.einsum("bhgd,bkhd->bhgk", qn, k_ctx) / np.sqrt(d)
+    pos = np.arange(nbt * bs)[None, None, None]
+    s = np.where(pos < np.asarray(lengths)[:, None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    ref = np.einsum("bhgk,bkhd->bhgd", p, v_ctx).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
