@@ -243,13 +243,21 @@ def roofline_bound(op: OpDesc, chip: hw.Chip = hw.TPU_V5E) -> float:
 
 class Fitness:
     """Maps a candidate config to a runtime (lower is better).  The genetic
-    search turns this into the paper's fitness f(a_i) = 1/runtime."""
+    search turns this into the paper's fitness f(a_i) = 1/runtime.
+
+    `kind` tags what the returned number *is* (analytical model vs measured
+    wall time) — the search cache keys on it, because a runtime_s measured
+    under one fitness is meaningless under another."""
+
+    kind: str = "model"
 
     def __call__(self, op: OpDesc, cfg: Config) -> float:
         raise NotImplementedError
 
 
 class ModelFitness(Fitness):
+    kind = "model"
+
     def __init__(self, chip: hw.Chip = hw.TPU_V5E):
         self.chip = chip
         self.evals = 0
@@ -266,6 +274,8 @@ class WallClockFitness(Fitness):
     Pallas interpret-mode execution on CPU (laptop-scale ops only).  Matches
     the paper's Step2 semantics exactly (JIT compile, execute, use runtime).
     """
+
+    kind = "wallclock"
 
     def __init__(self, runner, repeats: int = 3):
         self.runner = runner  # (op, cfg) -> callable()

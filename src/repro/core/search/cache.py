@@ -2,10 +2,16 @@
 results ... can further expedite the search process for a family of models
 composed from the same backbone".
 
-Keyed on (chip name, operator signature) — the paper's computational-identity
-criterion (same shapes, filter size, stride, padding) is exactly what
-`OpDesc.signature()` encodes.  Persisted as JSON so offline tuning databases
-ship with the inference binary.
+Keyed on (chip name, template, FITNESS KIND, operator signature) — the
+paper's computational-identity criterion (same shapes, filter size, stride,
+padding) is exactly what `OpDesc.signature()` encodes.  The fitness kind
+('model' analytical vs 'wallclock' measured) is part of the key because the
+cached `runtime_s` is only meaningful under the fitness that produced it: a
+cache populated under the analytical model must MISS for a wall-clock tuner
+(and vice versa) instead of feeding stale configs and bogus runtimes into
+plan selection.  Legacy entries persisted before the tag existed are served
+as model-fitness.  Persisted as JSON so offline tuning databases ship with
+the inference binary.
 """
 
 from __future__ import annotations
@@ -16,6 +22,10 @@ import threading
 from typing import Any, Dict, Optional
 
 from repro.core.schedules import OpDesc
+
+# Fitness kind of entries written before the key carried a tag, and the
+# default when a caller doesn't say (matches Tuner's default ModelFitness).
+MODEL_FITNESS = "model"
 
 
 class SearchCache:
@@ -30,12 +40,22 @@ class SearchCache:
                 self._store = json.load(f)
 
     @staticmethod
-    def key(chip_name: str, op: OpDesc, template: str) -> str:
+    def key(chip_name: str, op: OpDesc, template: str,
+            fitness: str = MODEL_FITNESS) -> str:
+        return f"{chip_name}|{template}|{fitness}|{op.signature()}"
+
+    @staticmethod
+    def _legacy_key(chip_name: str, op: OpDesc, template: str) -> str:
+        """Pre-fitness-tag key format (treated as model-fitness entries)."""
         return f"{chip_name}|{template}|{op.signature()}"
 
-    def get(self, chip_name: str, op: OpDesc, template: str) -> Optional[Dict[str, Any]]:
+    def get(self, chip_name: str, op: OpDesc, template: str,
+            fitness: str = MODEL_FITNESS) -> Optional[Dict[str, Any]]:
         with self._lock:
-            entry = self._store.get(self.key(chip_name, op, template))
+            entry = self._store.get(self.key(chip_name, op, template, fitness))
+            if entry is None and fitness == MODEL_FITNESS:
+                # back-compat: untagged legacy entries are model-fitness
+                entry = self._store.get(self._legacy_key(chip_name, op, template))
         if entry is None:
             self.misses += 1
         else:
@@ -43,9 +63,10 @@ class SearchCache:
         return entry
 
     def put(self, chip_name: str, op: OpDesc, template: str,
-            config: Dict[str, Any], runtime_s: float, method: str) -> None:
+            config: Dict[str, Any], runtime_s: float, method: str,
+            fitness: str = MODEL_FITNESS) -> None:
         with self._lock:
-            self._store[self.key(chip_name, op, template)] = {
+            self._store[self.key(chip_name, op, template, fitness)] = {
                 "config": config,
                 "runtime_s": runtime_s,
                 "method": method,

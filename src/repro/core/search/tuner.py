@@ -17,7 +17,7 @@ from repro import hw
 from repro.core.costmodel import Fitness, ModelFitness
 from repro.core.schedules import OpDesc, Template, templates_for
 from repro.core.search.base import SearchResult, SearchTask
-from repro.core.search.cache import SearchCache
+from repro.core.search.cache import MODEL_FITNESS, SearchCache
 from repro.core.search.genetic import GeneticSearch
 from repro.core.search.random_search import random_search
 from repro.core.search.rl_search import RLSearch
@@ -45,6 +45,12 @@ class Tuner:
         self.seed = seed
         self.log: List[SearchResult] = []
 
+    @property
+    def fitness_kind(self) -> str:
+        """Cache-key tag of the active fitness ('model' when defaulted)."""
+        return getattr(self.fitness, "kind", MODEL_FITNESS) \
+            if self.fitness is not None else MODEL_FITNESS
+
     def _make_task(self, op: OpDesc, template: Template) -> SearchTask:
         fitness = self.fitness or ModelFitness(self.chip)
         return SearchTask(op, template, fitness, self.chip, seed=self.seed)
@@ -56,7 +62,8 @@ class Tuner:
         template = template or templates_for(op)[0]
 
         if use_cache:
-            hit = self.cache.get(self.chip.name, op, template.name)
+            hit = self.cache.get(self.chip.name, op, template.name,
+                                 fitness=self.fitness_kind)
             if hit is not None:
                 return SearchResult(op, template.name, hit["config"],
                                     hit["runtime_s"], 0, 0.0,
@@ -77,5 +84,6 @@ class Tuner:
         best = min(results, key=lambda r: r.runtime_s)
         self.log.extend(results)
         self.cache.put(self.chip.name, op, template.name,
-                       best.config, best.runtime_s, best.method)
+                       best.config, best.runtime_s, best.method,
+                       fitness=self.fitness_kind)
         return best

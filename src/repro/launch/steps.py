@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.kernels.dispatch import matmul_dispatch
 from repro.distributed.sharding import (
     DEFAULT_RULES,
     ShardingRules,
@@ -293,18 +294,24 @@ def paged_pool_sharding(model, mesh: Mesh, rules: ShardingRules):
 
 def jit_paged_prefill_step(model, mesh: Mesh, rules: ShardingRules,
                            batch_specs, attn_backend: str = "xla",
-                           attn_config=None, interpret: bool = True):
+                           attn_config=None, matmul_table=None,
+                           interpret: bool = True):
     """(params, batch, lengths) -> (logits (B,1,V), ks, vs) — the bucketed
     prefill of the continuous runtime.  One compile per prompt-length bucket;
     `lengths` picks each row's true last token out of the right-padding.
-    The attention backend/config is the plan's *prefill-stage* choice."""
+    The attention backend/config is the plan's *prefill-stage* choice, and
+    `matmul_table` (role -> (backend, config), from
+    `PlanRouter.matmul_table('prefill')`) routes qkv/mlp/lm_head through the
+    plan's stage matmul lanes — both are closed over, so they are static at
+    trace time and baked into the compiled bucket program."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     b_shard = make_batch_shardings(mesh, rules, batch_specs)
     len_shard = NamedSharding(mesh, rules.spec(("batch",)))
 
     def prefill_step(params, batch, lengths):
-        with activation_rules(rules):
+        with activation_rules(rules), \
+                matmul_dispatch(matmul_table, interpret=interpret):
             return model.prefill_kv(params, batch, lengths,
                                     attn_backend=attn_backend,
                                     attn_config=attn_config,
@@ -315,7 +322,7 @@ def jit_paged_prefill_step(model, mesh: Mesh, rules: ShardingRules,
 
 
 def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
-                          attn_backend: str = "xla",
+                          attn_backend: str = "xla", matmul_table=None,
                           interpret: bool = True):
     """(params, k_pool, v_pool, block_tables, lengths, tokens)
         -> (logits, k_pool, v_pool)
@@ -324,8 +331,11 @@ def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
     shared block pool.  All argument shapes are static in (slots, pool
     blocks, table width), so the scheduler admits/retires requests by
     editing the *data* — this program never recompiles mid-serve.  The
-    attention backend (XLA gather vs block-table Pallas kernel) is baked in
-    per the inference plan's decode-stage choice."""
+    attention backend (XLA gather vs block-table Pallas kernel) and the
+    `matmul_table` (the plan's decode-stage qkv/mlp/lm_head lane choices,
+    from `PlanRouter.matmul_table('decode')`) are closed over — static at
+    trace time, so plan dispatch adds zero per-step cost and admission
+    still never recompiles."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     pool_shard = paged_pool_sharding(model, mesh, rules)
@@ -333,7 +343,8 @@ def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
     def decode_step(params, k_pool, v_pool, block_tables, lengths, tokens):
-        with activation_rules(rules):
+        with activation_rules(rules), \
+                matmul_dispatch(matmul_table, interpret=interpret):
             logits, k_pool, v_pool = model.decode_step_paged(
                 params, k_pool, v_pool, block_tables, lengths, tokens,
                 attn_backend=attn_backend, attn_interpret=interpret)

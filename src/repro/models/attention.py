@@ -66,9 +66,10 @@ def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                  positions: Optional[jnp.ndarray]):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
-    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
-    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    # role-tagged: the serve plan's stage `qkv_proj` choice dispatches these
+    q = dense(p["wq"], x, role="qkv_proj").reshape(b, s, cfg.n_heads, hd)
+    k = dense(p["wk"], x, role="qkv_proj").reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x, role="qkv_proj").reshape(b, s, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q)
         k = rms_norm(p["k_norm"], k)

@@ -23,8 +23,21 @@ def dense_init(rng, d_in: int, d_out: int, scale: Optional[float] = None) -> Par
     return {"w": jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale}
 
 
-def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
-    return x @ p["w"].astype(x.dtype)
+def dense(p: Params, x: jnp.ndarray, role: Optional[str] = None,
+          activation: Optional[str] = None) -> jnp.ndarray:
+    """Projection `x @ w`, routable through the WPK plan's matmul lanes.
+
+    `role` names the projection against the serve plan's stage matmul table
+    ('qkv_proj' / 'mlp_up' / 'mlp_down' / 'lm_head'); inside an active
+    `kernels.dispatch.matmul_dispatch` context the chosen lane (XLA vs tuned
+    Pallas) runs instead of the plain dot.  `activation` is fused into the
+    tuned kernel's epilogue (applied after the dot on the XLA lane — same
+    numerics).  With no role/activation this is exactly `x @ w`."""
+    w = p["w"].astype(x.dtype)
+    if role is None and activation is None:
+        return x @ w
+    from repro.kernels.dispatch import dispatch_dense
+    return dispatch_dense(role, x, w, activation=activation)
 
 
 def norm_init(d: int) -> Params:
@@ -98,6 +111,12 @@ def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
 def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
     logits = x @ p["emb"].astype(x.dtype).T
     return constrain(logits, ("batch", None, "vocab"))
+
+
+def lm_head_logits(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """LM head projection `x @ w` (w: (d_model, vocab)), role-tagged so the
+    serve plan's `lm_head` stage choice dispatches it (see kernels.dispatch)."""
+    return constrain(dense(p, x, role="lm_head"), ("batch", None, "vocab"))
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,

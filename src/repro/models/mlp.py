@@ -42,13 +42,15 @@ def mlp_logical_axes(gated: bool = True) -> Params:
 
 
 def mlp_apply(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
-    h = dense(p["w_in"], x)
+    # role-tagged for the serve plan's stage matmul dispatch; the activation
+    # rides into the tuned kernel's epilogue (XLA lane applies it after).
     if "w_gate" in p:
-        h = _act(dense(p["w_gate"], x), act) * h
+        h = dense(p["w_in"], x, role="mlp_up")
+        h = dense(p["w_gate"], x, role="mlp_up", activation=act) * h
     else:
-        h = _act(h, act)
+        h = dense(p["w_in"], x, role="mlp_up", activation=act)
     h = constrain(h, ("batch", None, "ffn"))
-    return dense(p["w_out"], h)
+    return dense(p["w_out"], h, role="mlp_down")
 
 
 # ------------------------------------------------------------------ MoE

@@ -37,8 +37,8 @@ from repro.models.common import (
     layer_norm,
     layer_norm_init,
     norm_init,
+    lm_head_logits,
     rms_norm,
-    unembed,
     dense,
     dense_init,
 )
@@ -191,8 +191,8 @@ class DecoderLM:
         return _norm(cfg, params["final_norm"], x)
 
     def forward(self, params: Params, batch: Batch) -> jnp.ndarray:
-        return unembed({"emb": params["lm_head"]["w"].T},
-                       self.hidden(params, batch))
+        return lm_head_logits(params["lm_head"],
+                              self.hidden(params, batch))
 
     @staticmethod
     def _scan_body(cfg, positions, x, bp):
@@ -238,7 +238,7 @@ class DecoderLM:
 
         x, (ks, vs) = runmode.layer_scan(_remat(cfg, body), x, params["blocks"])
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x[:, -1:])
+        logits = lm_head_logits(params["lm_head"], x[:, -1:])
 
         cache = self.init_cache(b, max_seq)
         cache["k"] = jax.lax.dynamic_update_slice(
@@ -262,7 +262,7 @@ class DecoderLM:
 
         x, (ks, vs) = runmode.layer_scan(body, x, (params["blocks"], cache["k"], cache["v"]))
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        logits = lm_head_logits(params["lm_head"], x)
         new_cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
         return logits, new_cache
 
@@ -309,7 +309,7 @@ class DecoderLM:
             idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
             x_last = jnp.take_along_axis(x, jnp.broadcast_to(
                 idx, (b, 1, x.shape[-1])), axis=1)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x_last)
+        logits = lm_head_logits(params["lm_head"], x_last)
         return logits, ks, vs
 
     def decode_step_paged(self, params: Params, k_pool: jnp.ndarray,
@@ -342,7 +342,7 @@ class DecoderLM:
 
         x, (ks, vs) = runmode.layer_scan(body, x, (params["blocks"], k_pool, v_pool))
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        logits = lm_head_logits(params["lm_head"], x)
         return logits, ks, vs
 
     @staticmethod
@@ -400,8 +400,8 @@ class MambaLM:
         return _norm(cfg, params["final_norm"], x)
 
     def forward(self, params: Params, batch: Batch) -> jnp.ndarray:
-        return unembed({"emb": params["lm_head"]["w"].T},
-                       self.hidden(params, batch))
+        return lm_head_logits(params["lm_head"],
+                              self.hidden(params, batch))
 
     def loss(self, params, batch):
         x = self.hidden(params, batch)
@@ -437,7 +437,7 @@ class MambaLM:
 
         x, (convs, hs) = runmode.layer_scan(body, x, params["blocks"])
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x[:, -1:])
+        logits = lm_head_logits(params["lm_head"], x[:, -1:])
         cache = {"conv": convs, "ssm": hs,
                  "lengths": jnp.full((b,), s, jnp.int32)}
         return logits, cache
@@ -455,7 +455,7 @@ class MambaLM:
         x, (convs, hs) = runmode.layer_scan(
             body, x, (params["blocks"], cache["conv"], cache["ssm"]))
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        logits = lm_head_logits(params["lm_head"], x)
         return logits, dict(cache, conv=convs, ssm=hs,
                             lengths=cache["lengths"] + 1)
 
@@ -554,8 +554,8 @@ class HybridLM:
         return _norm(cfg, params["final_norm"], x)
 
     def forward(self, params: Params, batch: Batch) -> jnp.ndarray:
-        return unembed({"emb": params["lm_head"]["w"].T},
-                       self.hidden(params, batch))
+        return lm_head_logits(params["lm_head"],
+                              self.hidden(params, batch))
 
     def loss(self, params, batch):
         x = self.hidden(params, batch)
@@ -621,7 +621,7 @@ class HybridLM:
                 cache["v"] = cache["v"].at[use, :, :s].set(v.astype(cache["v"].dtype))
                 use += 1
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x[:, -1:])
+        logits = lm_head_logits(params["lm_head"], x[:, -1:])
         cache["conv"] = jnp.concatenate(convs, 0)
         cache["ssm"] = jnp.concatenate(ssms, 0)
         cache["lengths"] = jnp.full((b,), s, jnp.int32)
@@ -663,7 +663,7 @@ class HybridLM:
                 x = x + xin + F.mlp_apply(sp["mlp"], h, cfg.act)
                 use += 1
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        logits = lm_head_logits(params["lm_head"], x)
         return logits, dict(cache, conv=jnp.concatenate(convs, 0),
                             ssm=jnp.concatenate(ssms, 0), k=new_k, v=new_v,
                             lengths=lengths + 1)
@@ -776,8 +776,8 @@ class EncDecLM:
         return _norm(cfg, params["final_norm"], x)
 
     def forward(self, params: Params, batch: Batch) -> jnp.ndarray:
-        return unembed({"emb": params["lm_head"]["w"].T},
-                       self.hidden(params, batch))
+        return lm_head_logits(params["lm_head"],
+                              self.hidden(params, batch))
 
     def loss(self, params, batch):
         x = self.hidden(params, batch)
@@ -823,7 +823,7 @@ class EncDecLM:
 
         x, (ks, vs) = runmode.layer_scan(body, x, (params["decoder"], enc_kv))
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x[:, -1:])
+        logits = lm_head_logits(params["lm_head"], x[:, -1:])
         cache = self.init_cache(b, max_seq)
         cache["k"] = cache["k"].at[:, :, :s].set(ks.astype(cache["k"].dtype))
         cache["v"] = cache["v"].at[:, :, :s].set(vs.astype(cache["v"].dtype))
@@ -851,7 +851,7 @@ class EncDecLM:
             body, x, (params["decoder"], cache["k"], cache["v"],
                       cache["ek"], cache["ev"]))
         x = _norm(cfg, params["final_norm"], x)
-        logits = unembed({"emb": params["lm_head"]["w"].T}, x)
+        logits = lm_head_logits(params["lm_head"], x)
         return logits, dict(cache, k=ks, v=vs, lengths=lengths + 1)
 
 

@@ -8,16 +8,22 @@ backs both the runtime and the benchmark harness.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List
 
 
 def percentile(values: List[float], p: float) -> float:
-    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input.
+
+    True nearest-rank: the value at rank ceil(p/100 * n) (1-based), i.e. the
+    smallest sample >= p percent of the distribution.  (The previous
+    round(p/100 * (n-1)) was a rounded linear-interpolation index, which
+    biased p95 toward the max on small samples.)"""
     if not values:
         return 0.0
     xs = sorted(values)
-    k = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
-    return xs[k]
+    rank = max(1, math.ceil(p / 100.0 * len(xs)))   # 1-based nearest rank
+    return xs[min(len(xs), rank) - 1]
 
 
 @dataclasses.dataclass

@@ -9,12 +9,16 @@ with BOTH shape families as distinct named nodes —
     prefill.attention   decode.attention
     prefill.qkv_proj    decode.qkv_proj
     prefill.mlp_up      decode.mlp_up
+    prefill.mlp_down    decode.mlp_down
     prefill.lm_head     decode.lm_head
 
 — and `selection.select` races the XLA lane against every applicable tuned
 Pallas template for each of them separately.  `PlanRouter` then answers the
 runtime's dispatch questions ("which attention backend for decode?", "which
 matmul config for prefill?") by stage-qualified lookup into that plan.
+`matmul_table(stage)` bundles every stage matmul's (backend, config) into
+the dispatch table `kernels.dispatch.matmul_dispatch` installs around the
+jitted serve programs.
 """
 
 from __future__ import annotations
@@ -41,32 +45,40 @@ def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
     xp = g.add_input("x_prefill", (1, prefill_len, d), dtype)
     wq = g.add_input("w_qkv", (d, (h + 2 * hkv) * hd), dtype)
     qkv_p = g.add_node("matmul", [xp, wq], (1, prefill_len, (h + 2 * hkv) * hd),
-                       name="prefill.qkv_proj")
+                       out_dtype=dtype, name="prefill.qkv_proj")
     qp = g.add_input("q_prefill", (1, prefill_len, h, hd), dtype)
     kp = g.add_input("k_prefill", (1, prefill_len, hkv, hd), dtype)
     att_p = g.add_node("attention", [qp, kp, kp], (1, prefill_len, h, hd),
-                       name="prefill.attention")
+                       out_dtype=dtype, name="prefill.attention")
     wu = g.add_input("w_up", (d, cfg.d_ff), dtype)
     mlp_p = g.add_node("matmul", [xp, wu], (1, prefill_len, cfg.d_ff),
-                       name="prefill.mlp_up")
+                       out_dtype=dtype, name="prefill.mlp_up")
+    wd = g.add_input("w_down", (cfg.d_ff, d), dtype)
+    hp = g.add_input("h_prefill", (1, prefill_len, cfg.d_ff), dtype)
+    mlpd_p = g.add_node("matmul", [hp, wd], (1, prefill_len, d),
+                        out_dtype=dtype, name="prefill.mlp_down")
     wl = g.add_input("w_lm", (d, cfg.vocab), dtype)
     lm_p = g.add_node("matmul", [xp, wl], (1, prefill_len, cfg.vocab),
-                      name="prefill.lm_head")
+                      out_dtype=dtype, name="prefill.lm_head")
 
     # ---- decode stage: `slots` requests, one query token each, long cache
     xd = g.add_input("x_decode", (slots, 1, d), dtype)
     qkv_d = g.add_node("matmul", [xd, wq], (slots, 1, (h + 2 * hkv) * hd),
-                       name="decode.qkv_proj")
+                       out_dtype=dtype, name="decode.qkv_proj")
     qd = g.add_input("q_decode", (slots, 1, h, hd), dtype)
     kd = g.add_input("k_decode", (slots, max_seq, hkv, hd), dtype)
     att_d = g.add_node("attention", [qd, kd, kd], (slots, 1, h, hd),
-                       name="decode.attention")
+                       out_dtype=dtype, name="decode.attention")
     mlp_d = g.add_node("matmul", [xd, wu], (slots, 1, cfg.d_ff),
-                       name="decode.mlp_up")
+                       out_dtype=dtype, name="decode.mlp_up")
+    hd_ = g.add_input("h_decode", (slots, 1, cfg.d_ff), dtype)
+    mlpd_d = g.add_node("matmul", [hd_, wd], (slots, 1, d),
+                        out_dtype=dtype, name="decode.mlp_down")
     lm_d = g.add_node("matmul", [xd, wl], (slots, 1, cfg.vocab),
-                      name="decode.lm_head")
+                      out_dtype=dtype, name="decode.lm_head")
 
-    g.set_outputs([qkv_p, att_p, mlp_p, lm_p, qkv_d, att_d, mlp_d, lm_d])
+    g.set_outputs([qkv_p, att_p, mlp_p, mlpd_p, lm_p,
+                   qkv_d, att_d, mlp_d, mlpd_d, lm_d])
     return g
 
 
@@ -75,8 +87,11 @@ def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
                      tuner: Optional[Tuner] = None,
                      dtype: str = "bfloat16") -> InferencePlan:
     """Tune the serve graph and return its stage-qualified InferencePlan."""
+    # dtype forwarded so the graph's tensors carry the width the plan is
+    # tuned for (dtype-sensitive validation/cost modelling sees bf16, not a
+    # float32 default that never matches the plan).
     g = build_serve_graph(cfg, prefill_len=prefill_len, slots=slots,
-                          max_seq=max_seq)
+                          max_seq=max_seq, dtype=dtype)
     return select(g, tuner=tuner, chip=chip, dtype=dtype)
 
 
@@ -117,6 +132,13 @@ class PlanRouter:
         if c is None or c.backend == "xla":
             return "xla", {}
         return "pallas_matmul", dict(c.config)
+
+    def matmul_table(self, stage: str) -> Dict[str, Tuple[str, Dict[str, Any]]]:
+        """Every stage matmul's (backend, config) keyed by role — the
+        dispatch table `kernels.dispatch.matmul_dispatch` installs around
+        the stage's jitted program."""
+        from repro.kernels.dispatch import MATMUL_ROLES
+        return {role: self.matmul_config(stage, role) for role in MATMUL_ROLES}
 
     def describe(self) -> Dict[str, str]:
         """Stage-qualified op -> chosen backend (for logs and benches)."""

@@ -4,22 +4,26 @@ Request lifecycle:
 
     submit() -> waiting -> [scheduler admits into a free slot]
              -> bucketed prefill (B=1, right-padded, KV committed into the
-                paged pool at the slot's block table)
-             -> joins the in-flight decode batch at the NEXT step
+                paged pool at the slot's block table; first token sampled)
+             -> joins the in-flight decode batch within the SAME step()
+                (admit -> prefill -> decode all run in one engine step, so
+                an admitted request has emitted 2 tokens after one step)
              -> greedy decode, one token per engine step, retiring on
                 eos/max_new -> blocks + slot freed, metrics recorded.
 
 Key properties the fixed-batch `ServeEngine` lacks:
 
   * requests are admitted into *running* decode batches — a new arrival
-    waits for one decode step, not for the whole previous batch to drain;
+    decodes alongside the in-flight batch in the very step that admits it,
+    instead of waiting for the whole previous batch to drain;
   * no cross-request padding: per-slot lengths/block-tables mean a 12-token
     prompt next to a 200-token prompt costs 12 tokens of KV;
   * the decode program is compiled ONCE (static slot/pool shapes); prefill
     compiles per power-of-two bucket, bounded by log2(max_seq) programs;
   * the tuned `InferencePlan` drives dispatch: prefill and decode attention
-    backends are chosen separately by `PlanRouter` from a stage-qualified
-    serve plan (see `repro.serve.router`).
+    backends AND every stage matmul (qkv_proj / mlp_up / mlp_down /
+    lm_head) are chosen separately by `PlanRouter` from a stage-qualified
+    serve plan (see `repro.serve.router` and `repro.kernels.dispatch`).
 
 The engine clock is injectable (`now_fn`) so benchmarks can replay Poisson
 arrival traces in wall time or virtual time with identical scheduling.
@@ -98,16 +102,21 @@ class ContinuousEngine:
         # per-slot host state
         self._lengths = np.zeros((cfg.max_slots,), np.int32)
         self._last_tok = np.zeros((cfg.max_slots,), np.int32)
-        # compiled programs — prefill and decode attention backends come
-        # from the plan's respective stage choices.  (The paged decode
-        # kernel's block geometry is fixed by the pool, so its stage choice
-        # contributes only the backend; the prefill flash kernel also takes
-        # the tuned block_q/block_kv config.  Stage matmul choices are
-        # recorded in the plan but not yet dispatched — see ROADMAP.)
+        # compiled programs — attention backends AND the per-stage matmul
+        # lane tables come from the plan's respective stage choices.  (The
+        # paged decode kernel's block geometry is fixed by the pool, so its
+        # stage choice contributes only the backend; the prefill flash
+        # kernel also takes the tuned block_q/block_kv config.  The matmul
+        # tables route qkv_proj/mlp_up/mlp_down/lm_head through the chosen
+        # XLA-vs-Pallas lane; closed over at trace time, so dispatch never
+        # recompiles mid-serve.)
         decode_backend, _ = self.router.attention_backend("decode")
-        self._decode = jit_paged_decode_step(model, mesh, rules,
-                                             attn_backend=decode_backend,
-                                             interpret=cfg.interpret)
+        self._matmul_tables = {s: self.router.matmul_table(s)
+                               for s in ("prefill", "decode")}
+        self._decode = jit_paged_decode_step(
+            model, mesh, rules, attn_backend=decode_backend,
+            matmul_table=self._matmul_tables["decode"],
+            interpret=cfg.interpret)
         self._prefill_choice = self.router.attention_backend("prefill")
         self._prefills: Dict[int, Any] = {}   # bucket len -> jitted prefill
         self._commit = jit_commit_prefill(model, mesh, rules)
@@ -164,6 +173,7 @@ class ContinuousEngine:
             fn = jit_paged_prefill_step(self.model, self.mesh, self.rules,
                                         specs, attn_backend=backend,
                                         attn_config=config,
+                                        matmul_table=self._matmul_tables["prefill"],
                                         interpret=self.cfg.interpret)
             self._prefills[bucket] = fn
         return fn

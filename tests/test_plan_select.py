@@ -75,8 +75,35 @@ def test_serve_graph_has_stage_qualified_nodes():
     g = build_serve_graph(cfg, prefill_len=32, slots=4, max_seq=64)
     names = {n.name for n in g.nodes}
     for stage in ("prefill", "decode"):
-        for op in ("qkv_proj", "attention", "mlp_up", "lm_head"):
+        for op in ("qkv_proj", "attention", "mlp_up", "mlp_down", "lm_head"):
             assert f"{stage}.{op}" in names
+
+
+def test_serve_graph_tensors_carry_requested_dtype():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    g = build_serve_graph(cfg, prefill_len=32, slots=4, max_seq=64,
+                          dtype="bfloat16")
+    assert {t.dtype for t in g.tensors.values()} == {"bfloat16"}
+
+
+def test_serve_plan_builds_graph_with_plan_dtype(monkeypatch):
+    """Regression: build_serve_plan must forward its dtype to
+    build_serve_graph — a bf16 plan tuned over a float32 graph shows every
+    dtype-sensitive validation the wrong operand widths."""
+    import repro.serve.router as R
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    seen = {}
+    orig = R.build_serve_graph
+
+    def spy(*args, **kwargs):
+        g = orig(*args, **kwargs)
+        seen["dtypes"] = {t.dtype for t in g.tensors.values()}
+        return g
+
+    monkeypatch.setattr(R, "build_serve_graph", spy)
+    R.build_serve_plan(cfg, prefill_len=16, slots=2, max_seq=32,
+                       tuner=_fast_tuner(), dtype="bfloat16")
+    assert seen["dtypes"] == {"bfloat16"}
 
 
 def test_router_stage_lookup_and_fallback():
@@ -90,8 +117,13 @@ def test_router_stage_lookup_and_fallback():
         assert isinstance(config, dict)
         backend, config = router.matmul_config(stage, "qkv_proj")
         assert backend in ("xla", "pallas_matmul")
-    # every serve op resolved per-stage
-    assert len(router.describe()) == 8
+        table = router.matmul_table(stage)
+        assert set(table) == {"qkv_proj", "mlp_up", "mlp_down", "lm_head"}
+        for b, c in table.values():
+            assert b in ("xla", "pallas_matmul")
+            assert isinstance(c, dict)
+    # every serve op resolved per-stage (5 ops x 2 stages)
+    assert len(router.describe()) == 10
 
     # no plan -> always the XLA lane, never an error
     bare = PlanRouter(None)

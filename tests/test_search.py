@@ -41,6 +41,7 @@ def test_genetic_deterministic_given_seed():
     assert a.config == b.config and a.runtime_s == b.runtime_s
 
 
+@pytest.mark.slow
 def test_genetic_convergence_and_history_monotone():
     res = genetic_search(SearchTask(MM, TEMPLATES["pallas_matmul"], seed=1))
     hist = res.history
@@ -55,6 +56,7 @@ def test_population_schedule_varies_size():
     assert res.runtime_s < float("inf")
 
 
+@pytest.mark.slow
 def test_best_config_beats_median_of_space():
     task = SearchTask(CONV, TEMPLATES["pallas_conv2d"], seed=0)
     res = genetic_search(task)

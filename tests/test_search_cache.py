@@ -1,0 +1,72 @@
+"""Search-cache fitness partitioning (no hypothesis dependency, unlike
+test_search.py, so these regressions always run in tier-1): a runtime_s is
+only meaningful under the fitness that produced it — model-fitness and
+wall-clock entries must never cross-serve."""
+
+from repro.core.schedules import OpDesc
+from repro.core.search.cache import SearchCache
+from repro.core.search.tuner import Tuner
+
+MM = OpDesc.matmul(512, 1024, 768)
+
+
+def test_cache_misses_across_fitness_kinds():
+    """Regression: an entry tuned under the analytical ModelFitness must NOT
+    be served to a wall-clock tuner (its runtime_s is a modeled number, not
+    a measurement) — and vice versa."""
+    cache = SearchCache()
+    cache.put("tpu_v5e", MM, "pallas_matmul", {"bm": 128}, 1e-4, "genetic",
+              fitness="model")
+    assert cache.get("tpu_v5e", MM, "pallas_matmul", fitness="model") is not None
+    assert cache.get("tpu_v5e", MM, "pallas_matmul", fitness="wallclock") is None
+    cache.put("tpu_v5e", MM, "pallas_matmul", {"bm": 256}, 2e-3, "genetic",
+              fitness="wallclock")
+    assert cache.get("tpu_v5e", MM, "pallas_matmul",
+                     fitness="wallclock")["config"] == {"bm": 256}
+    assert cache.get("tpu_v5e", MM, "pallas_matmul",
+                     fitness="model")["config"] == {"bm": 128}
+
+
+def test_cache_legacy_untagged_entries_served_as_model_fitness():
+    """Entries persisted before the fitness tag existed keep hitting for
+    model-fitness tuners and stay invisible to wall-clock ones."""
+    cache = SearchCache()
+    legacy_key = f"tpu_v5e|pallas_matmul|{MM.signature()}"
+    cache._store[legacy_key] = {"config": {"bm": 64}, "runtime_s": 1e-4,
+                                "method": "genetic"}
+    assert cache.get("tpu_v5e", MM, "pallas_matmul",
+                     fitness="model")["config"] == {"bm": 64}
+    assert cache.get("tpu_v5e", MM, "pallas_matmul", fitness="wallclock") is None
+
+
+def test_tuner_fitness_kind_partitions_the_cache():
+    """A Tuner under wall-clock fitness must not consume (or poison) the
+    model-fitness entries for the same op/template."""
+    from repro.core.costmodel import WallClockFitness, pallas_time
+
+    cache = SearchCache()
+    model_tuner = Tuner(methods=("genetic",), cache=cache)
+    r_model = model_tuner.tune(MM)
+    assert model_tuner.fitness_kind == "model"
+
+    # a fake wall-clock fitness (kind='wallclock') with detuned timings so a
+    # cross-fitness cache hit would be observable as a bogus runtime_s
+    class FakeWallClock(WallClockFitness):
+        def __init__(self):
+            super().__init__(runner=None, repeats=1)
+
+        def __call__(self, op, cfg):
+            self.evals += 1
+            return 10.0 + pallas_time(op, cfg)
+
+    wall_tuner = Tuner(methods=("genetic",), cache=cache,
+                       fitness=FakeWallClock())
+    assert wall_tuner.fitness_kind == "wallclock"
+    r_wall = wall_tuner.tune(MM)
+    assert "cache" not in r_wall.method          # cross-fitness MISS
+    assert r_wall.runtime_s >= 10.0              # measured, not modeled
+    # both kinds now cached side by side; each tuner hits its own entry
+    assert "cache" in model_tuner.tune(MM).method
+    hit = wall_tuner.tune(MM)
+    assert "cache" in hit.method and hit.runtime_s == r_wall.runtime_s
+    assert model_tuner.tune(MM).runtime_s == r_model.runtime_s

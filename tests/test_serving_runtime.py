@@ -136,8 +136,25 @@ def test_scheduler_defers_future_arrivals():
 def test_percentile_nearest_rank():
     assert percentile([], 95) == 0.0
     xs = [float(i) for i in range(1, 101)]
-    assert percentile(xs, 50) == pytest.approx(50.0, abs=1.0)
-    assert percentile(xs, 95) == pytest.approx(95.0, abs=1.0)
+    # with n=100 the nearest rank IS the percentile value, exactly
+    assert percentile(xs, 50) == 50.0
+    assert percentile(xs, 95) == 95.0
+    assert percentile(xs, 100) == 100.0
+
+
+def test_percentile_nearest_rank_small_samples():
+    """Regression: the old round(p/100*(n-1)) rounded-interpolation index
+    is NOT nearest-rank.  ceil(p/100*n) is: the smallest sample covering at
+    least p percent of the distribution."""
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 25) == 1.0   # ceil(1.0) -> rank 1 (old: rank 2)
+    assert percentile(xs, 50) == 2.0
+    assert percentile(xs, 75) == 3.0
+    assert percentile(xs, 95) == 4.0
+    assert percentile([7.0], 95) == 7.0
+    assert percentile([1.0, 9.0], 50) == 1.0   # ceil(1.0) -> rank 1
+    # p=0 degenerates to the smallest sample, never an index error
+    assert percentile(xs, 0) == 1.0
 
 
 # ------------------------------------------------------------ engine e2e
@@ -189,6 +206,58 @@ def test_midflight_admission_no_recompile_and_exact_decode(tiny_lm):
     assert done[2] == _reference_greedy(model, params, p2, 10)
     eng.cache.alloc.check_invariants()
     assert eng.cache.alloc.num_used == 0   # everything returned to the pool
+
+
+def test_admitted_request_decodes_in_same_step(tiny_lm):
+    """Pinning the documented lifecycle: step() admits, prefills (first
+    token) and then decodes the NEW slot in the SAME step — an admitted
+    request has emitted 2 tokens after one step(), not 1."""
+    cfg, model, params = tiny_lm
+    eng = ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=2, block_size=8, max_blocks_per_seq=6,
+                      max_new_tokens=8))
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(0, cfg.vocab, size=9).astype(np.int32))
+    with eng.mesh:
+        assert eng.step()
+    req = next(r for r in eng.scheduler.slots if r is not None)
+    assert len(req.output) == 2    # prefill's first token + same-step decode
+
+
+@pytest.mark.slow
+def test_poisson_replay_virtual_clock(tiny_lm):
+    """Poisson-replay under a virtual clock: the injectable now_fn drives
+    scheduling, every request completes, and TTFT/latency are measured in
+    virtual seconds (deterministic, no wall-clock sleeps in the numbers)."""
+    cfg, model, params = tiny_lm
+    clock = {"t": 0.0}
+    eng = ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=2, block_size=8, max_blocks_per_seq=6,
+                      max_new_tokens=6),
+        now_fn=lambda: clock["t"])
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.5, size=8))
+    for a in arrivals:
+        eng.submit(rng.integers(0, cfg.vocab,
+                                size=int(rng.integers(4, 20))).astype(np.int32),
+                   max_new_tokens=4, arrival_time=float(a))
+    eng.metrics.start_time = 0.0
+    with eng.mesh:
+        while eng.scheduler.has_work:
+            ran = eng.step()
+            clock["t"] += 0.25 if ran else 0.05   # virtual step cost
+    eng.metrics.end_time = clock["t"]
+    done = eng._done
+    assert len(done) == 8
+    assert all(len(r.output) == 4 for r in done)
+    s = eng.metrics.summary()
+    assert s["requests"] == 8
+    # virtual-clock sanity: every TTFT positive and bounded by the run
+    assert all(0 < t <= clock["t"] for t in eng.metrics.ttfts_s)
+    assert s["latency_p95_s"] <= clock["t"]
+    eng.cache.alloc.check_invariants()
 
 
 def test_engine_overload_queues_and_completes(tiny_lm):
