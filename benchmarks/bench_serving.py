@@ -20,6 +20,14 @@ engine TTFT and occupancy.  The paper's §3.4 claim shape (e2e serving
 speedup at matched latency) reproduces here as the tokens/s ratio at the
 reported p95s.
 
+A third section (`--pressure`) is the pool-pressure sweep: the same Poisson
+workload replayed with the KV block pool shrunk to 1.0x / 0.5x / 0.25x of
+the worst-case demand (slots x max table width).  Worst-case reservation
+simply could not run below 1.0x; on-demand growth + preemption completes
+the full workload at every size — the sweep reports tokens/s, p95,
+preemption count, swap traffic and stall time per pool size, making the
+reservation-vs-preemption trade measurable.
+
 A second section (`--lanes`) reports the PER-LANE breakdown of the plan's
 stage matmul dispatch: the same Poisson workload replayed through an
 xla-only plan, the tuned serve plan (`build_serve_plan` — each stage
@@ -192,13 +200,7 @@ def lane_breakdown(model, params, mesh, cfg, rcfg: RuntimeConfig,
         router = PlanRouter(plan)
         engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg,
                                   router=router)
-        # compile every bucket + the decode program outside the timed replay
-        rng = np.random.default_rng(0)
-        for s in (8, prompt_hi // 2, prompt_hi):
-            engine.submit(rng.integers(0, cfg.vocab, size=s).astype(np.int32),
-                          max_new_tokens=2)
-        engine.run()
-        engine.reset_metrics()
+        warm_engine(engine, cfg.vocab, prompt_hi)
         r = drive_continuous(engine, workload)
         r["lanes"] = _lane_histogram(router)
         results[label] = r
@@ -215,10 +217,62 @@ def lane_breakdown(model, params, mesh, cfg, rcfg: RuntimeConfig,
     return results
 
 
+def warm_engine(engine: ContinuousEngine, vocab: int, prompt_hi: int) -> None:
+    """Compile the prefill buckets + decode program outside a timed replay."""
+    rng = np.random.default_rng(0)
+    for s in (8, prompt_hi // 2, prompt_hi):
+        engine.submit(rng.integers(0, vocab, size=s).astype(np.int32),
+                      max_new_tokens=2)
+    engine.run()
+    engine.reset_metrics()
+
+
+# ------------------------------------------------------- pool-pressure sweep
+def pressure_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig, workload,
+                   factors=(1.0, 0.5, 0.25), verbose: bool = True) -> dict:
+    """Replay the same Poisson workload with the block pool shrunk to
+    `factor` x worst-case demand (max_slots x max_blocks_per_seq).  The
+    old worst-case-reservation admission would serialize or starve below
+    1.0x; on-demand growth + preemption must complete every request at
+    every factor, trading throughput/p95 for memory."""
+    import dataclasses as _dc
+
+    worst = rcfg.max_slots * rcfg.max_blocks_per_seq
+    prompt_hi = max(len(w["prompt"]) for w in workload)
+    results = {}
+    for f in factors:
+        usable = max(rcfg.max_blocks_per_seq, int(round(worst * f)))
+        sized = _dc.replace(rcfg, num_blocks=usable + 1)
+        engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, sized)
+        warm_engine(engine, cfg.vocab, prompt_hi)
+        r = drive_continuous(engine, workload)
+        s = engine.metrics.summary()
+        errors = len(workload) - r["done"]
+        r.update(pool_blocks=usable, factor=f, errors=errors,
+                 preemptions=int(s["preemptions"]),
+                 swap_mb=(s["swap_out_bytes"] + s["swap_in_bytes"]) / 2**20,
+                 stall_s=s["stall_s"])
+        results[f] = r
+        if verbose:
+            print(f"pool {f:4.2f}x ({usable:3d} blocks): "
+                  f"{r['tokens_per_s']:8.1f} tok/s | "
+                  f"p95 {r['latency_p95_s']:6.2f}s | "
+                  f"preemptions {r['preemptions']:3d} | "
+                  f"swap {r['swap_mb']:6.2f} MiB | "
+                  f"stall {r['stall_s']:5.2f}s | errors {errors}")
+    full = results[min(factors)]
+    if verbose:
+        ok = full["errors"] == 0 and full["preemptions"] >= 1
+        print(f"pool-pressure check (smallest pool completes full workload "
+              f"via preemption): {'PASS' if ok else 'MISS'}")
+    return results
+
+
 # -------------------------------------------------------------------- harness
 def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           rate_hz: float = 0.0, verbose: bool = True,
-          lanes: bool = True, lane_requests: int = 12) -> dict:
+          lanes: bool = True, lane_requests: int = 12,
+          pressure: bool = True) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
     model = build_model(cfg)
@@ -281,6 +335,12 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
               f"(target >= 1.3x at equal-or-better p95: "
               f"{'PASS' if speedup >= 1.3 and cont['latency_p95_s'] <= fixed['latency_p95_s'] else 'MISS'})")
     out = {"fixed": fixed, "continuous": cont, "speedup": speedup}
+    if pressure:
+        if verbose:
+            print("--- pool-pressure sweep (same Poisson workload; pool "
+                  "shrunk vs worst-case demand; preemption + swap) ---")
+        out["pressure"] = pressure_sweep(model, params, mesh, cfg, rcfg,
+                                         workload, verbose=verbose)
     if lanes:
         if verbose:
             print("--- stage-matmul lane breakdown (same Poisson workload; "
@@ -298,6 +358,11 @@ def run(csv_rows):
                      f"p95={r['continuous']['latency_p95_s']:.2f}s"))
     csv_rows.append(("serve_speedup_x", r["speedup"],
                      "continuous vs fixed, same Poisson workload"))
+    for f, pr in r.get("pressure", {}).items():
+        csv_rows.append((f"serve_pool_{f:.2f}x_tok_s", pr["tokens_per_s"],
+                         f"preemptions={pr['preemptions']} "
+                         f"swap_mb={pr['swap_mb']:.2f} "
+                         f"errors={pr['errors']}"))
     for label, lr in r.get("lanes", {}).items():
         lanes = ",".join(f"{k}:{v}" for k, v in sorted(lr["lanes"].items()))
         csv_rows.append((f"serve_lane_{label.replace(' ', '_')}_tok_s",
@@ -315,6 +380,9 @@ if __name__ == "__main__":
                     help="skip the stage-matmul per-lane plan breakdown")
     ap.add_argument("--lane-requests", type=int, default=12,
                     help="workload prefix replayed per lane in the breakdown")
+    ap.add_argument("--no-pressure", action="store_true",
+                    help="skip the pool-pressure (preemption) sweep")
     args = ap.parse_args()
     bench(args.requests, args.slots, args.seed, args.rate,
-          lanes=not args.no_lanes, lane_requests=args.lane_requests)
+          lanes=not args.no_lanes, lane_requests=args.lane_requests,
+          pressure=not args.no_pressure)

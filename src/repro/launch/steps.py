@@ -365,10 +365,20 @@ def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
 def jit_commit_prefill(model, mesh: Mesh, rules: ShardingRules):
     """(k_pool, v_pool, ks, vs, block_ids) -> (k_pool, v_pool)
 
-    Scatter one prefilled request's per-layer K/V (L, 1, S_pad, Hkv, hd)
-    into the physical pool at `block_ids` (S_pad/block_size entries; padding
-    entries point at the null sink block).  Donates the pools; one compile
-    per prefill bucket."""
+    Scatter one request's per-layer K/V (L, 1, S_pad, Hkv, hd) into the
+    physical pool at `block_ids` (S_pad/block_size entries; padding entries
+    point at the null sink block).  Donates the pools; one compile per
+    power-of-two bucket.
+
+    This is the single commit path for BOTH ways KV enters the pool:
+      * prefill — a freshly admitted request's prompt KV, computed by the
+        bucketed prefill step;
+      * resume  — a preempted request's swapped-out KV, read back from the
+        host buffer and scattered into its freshly allocated blocks
+        (`ContinuousEngine._resume`).  Resume pads to the same power-of-two
+        bucket ladder as prefill, so commit compiles stay bounded by the
+        ladder height (a resume can at most warm a rung no prompt reached)
+        and the decode program itself never recompiles."""
     rules = prune_for_mesh(rules, mesh)
     pool_shard = paged_pool_sharding(model, mesh, rules)
 

@@ -13,7 +13,11 @@ Two layers of responsibility:
   * `BlockAllocator` — pure host-side bookkeeping: free-list, per-request
     block tables, alloc/free invariants.  Physical block 0 is reserved as the
     *null sink*: slot-table entries of inactive slots and padding positions
-    point at it, so device-side scatters never need a mask branch.
+    point at it, so device-side scatters never need a mask branch.  A request
+    can be *swapped out* (its blocks return to the pool while the allocator
+    remembers how many it held) and later *swapped in* (fresh blocks of the
+    same count, possibly different physical ids — the block table is the only
+    indirection, so ids are free to change across a swap).
   * `PagedKVCache`  — the device tensors: `k`/`v` pools shaped
     `(n_layers, num_blocks, block_size, n_kv_heads, hd)` plus helpers to
     build the dense `(max_slots, blocks_per_seq)` block-table array the
@@ -56,6 +60,8 @@ class BlockAllocator:
         # block 0 reserved as the null sink
         self._free: List[int] = list(range(cfg.num_blocks - 1, NULL_BLOCK, -1))
         self.tables: Dict[int, List[int]] = {}
+        # rid -> block count held at swap-out (no physical blocks owned)
+        self.swapped: Dict[int, int] = {}
 
     # ------------------------------------------------------------ queries
     @property
@@ -78,6 +84,8 @@ class BlockAllocator:
         """Claim `n_blocks` physical blocks for request `rid`."""
         if rid in self.tables:
             raise ValueError(f"request {rid} already holds blocks")
+        if rid in self.swapped:
+            raise ValueError(f"request {rid} is swapped out; use swap_in")
         if not self.can_allocate(n_blocks):
             raise MemoryError(
                 f"KV pool exhausted: want {n_blocks}, free {len(self._free)}")
@@ -103,6 +111,28 @@ class BlockAllocator:
         self._free.extend(reversed(blocks))
         return len(blocks)
 
+    # ------------------------------------------------------------- swapping
+    def swap_out(self, rid: int) -> int:
+        """Release rid's physical blocks while remembering how many it held;
+        returns the block count.  The caller is responsible for saving the
+        block *contents* first (see `PagedKVCache.swap_out`)."""
+        if rid in self.swapped:
+            raise ValueError(f"request {rid} already swapped out")
+        n = self.free(rid)
+        self.swapped[rid] = n
+        return n
+
+    def swap_in(self, rid: int) -> List[int]:
+        """Re-claim as many blocks as rid held at swap-out (fresh physical
+        ids); raises MemoryError if the pool cannot cover them."""
+        n = self.swapped[rid]
+        if not self.can_allocate(n):
+            raise MemoryError(
+                f"KV pool exhausted on swap-in: want {n}, free "
+                f"{len(self._free)}")
+        del self.swapped[rid]
+        return self.allocate(rid, n)
+
     def check_invariants(self) -> None:
         """Every block is either free or owned by exactly one request."""
         owned = [b for t in self.tables.values() for b in t]
@@ -112,6 +142,9 @@ class BlockAllocator:
         assert combined == list(range(1, self.cfg.num_blocks)), (
             f"block accounting broken: {combined}")
         assert len(set(owned)) == len(owned), "block double-owned"
+        assert not (set(self.swapped) & set(self.tables)), (
+            "request both active and swapped out")
+        assert all(n >= 0 for n in self.swapped.values())
 
 
 class PagedKVCache:
@@ -124,6 +157,30 @@ class PagedKVCache:
         shape = (n_layers, cfg.num_blocks, cfg.block_size, n_kv_heads, head_dim)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
+        # rid -> (k_host, v_host) of shape (L, n_blocks, bs, Hkv, hd):
+        # preempted requests' KV lives here, off-device, until swap-in
+        self._swapped: Dict[int, tuple] = {}
+
+    # ------------------------------------------------------------- swapping
+    def is_swapped(self, rid: int) -> bool:
+        return rid in self._swapped
+
+    def swap_out(self, rid: int) -> int:
+        """Copy rid's KV blocks to a host-side buffer and release the
+        physical blocks; returns the bytes moved.  The request's KV survives
+        preemption entirely off-device — a later `take_swapped` + commit
+        scatters it back into (possibly different) physical blocks."""
+        ids = jnp.asarray(self.alloc.tables[rid], jnp.int32)
+        k_host = np.asarray(self.k[:, ids])
+        v_host = np.asarray(self.v[:, ids])
+        self._swapped[rid] = (k_host, v_host)
+        self.alloc.swap_out(rid)
+        return k_host.nbytes + v_host.nbytes
+
+    def take_swapped(self, rid: int):
+        """Pop rid's host-side (k, v) buffers for swap-in; the caller
+        scatters them at the freshly allocated block table."""
+        return self._swapped.pop(rid)
 
     def table_array(self, slot_rids: List[Optional[int]]) -> np.ndarray:
         """Dense (max_slots, max_blocks_per_seq) int32 block-table array for

@@ -43,6 +43,11 @@ class ServeMetrics:
     cache_occupancy: List[float] = dataclasses.field(default_factory=list)
     start_time: float = 0.0
     end_time: float = 0.0
+    # preemption / swap accounting (on-demand KV growth under pool pressure)
+    preemptions: int = 0
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
+    stall_s: float = 0.0       # total off-slot time of preempted requests
 
     # ----------------------------------------------------------- recording
     def record_step(self, active_slots: int, max_slots: int,
@@ -52,12 +57,27 @@ class ServeMetrics:
         self.cache_occupancy.append(cache_occ)
 
     def record_first_token(self, ttft_s: float) -> None:
+        if math.isnan(ttft_s):
+            raise ValueError(
+                "TTFT of a request with no first token (NaN) cannot be "
+                "aggregated")
         self.ttfts_s.append(ttft_s)
 
     def record_completion(self, latency_s: float, n_tokens: int) -> None:
+        if math.isnan(latency_s):
+            raise ValueError(
+                "latency of an unfinished request (NaN) cannot be aggregated")
         self.requests_done += 1
         self.tokens_out += n_tokens
         self.latencies_s.append(latency_s)
+
+    def record_preemption(self, nbytes: int) -> None:
+        self.preemptions += 1
+        self.swap_out_bytes += nbytes
+
+    def record_resume(self, nbytes: int, stall_s: float) -> None:
+        self.swap_in_bytes += nbytes
+        self.stall_s += stall_s
 
     # ------------------------------------------------------------- summary
     @property
@@ -86,4 +106,8 @@ class ServeMetrics:
             "cache_occupancy_mean": (sum(self.cache_occupancy)
                                      / max(1, len(self.cache_occupancy))),
             "cache_occupancy_max": max(self.cache_occupancy, default=0.0),
+            "preemptions": float(self.preemptions),
+            "swap_out_bytes": float(self.swap_out_bytes),
+            "swap_in_bytes": float(self.swap_in_bytes),
+            "stall_s": self.stall_s,
         }

@@ -2,14 +2,30 @@
 
 Request lifecycle:
 
-    submit() -> waiting -> [scheduler admits into a free slot]
+    submit() -> waiting -> [scheduler admits into a free slot if the
+                PROMPT fits the free pool — not prompt+budget]
              -> bucketed prefill (B=1, right-padded, KV committed into the
                 paged pool at the slot's block table; first token sampled)
              -> joins the in-flight decode batch within the SAME step()
                 (admit -> prefill -> decode all run in one engine step, so
                 an admitted request has emitted 2 tokens after one step)
-             -> greedy decode, one token per engine step, retiring on
-                eos/max_new -> blocks + slot freed, metrics recorded.
+             -> greedy decode, one token per engine step; KV blocks grow
+                ON DEMAND (`BlockAllocator.extend`, one block as each
+                boundary is crossed); retiring on eos/max_new -> blocks +
+                slot freed, metrics recorded.
+
+Under pool pressure the grow path preempts: when a request cannot extend,
+the scheduler's victim (LIFO by admission, preferring the most remaining
+budget) has its KV swapped out to a host buffer, its slot and blocks are
+released, and it joins the resume queue.  Resume re-admits ahead of new
+arrivals, swaps the saved KV back into freshly allocated blocks through
+the SAME jitted commit program the bucketed prefill uses (padded to the
+same power-of-two buckets), restores the slot's length/last-token state,
+and decoding continues — no token is recomputed and the single decode
+program never recompiles (its shapes are static in slots and pool blocks;
+preemption only edits block-table *data*).  Commit programs stay bounded
+by the same power-of-two bucket ladder prefill uses: a resume can at most
+warm a ladder rung no prompt happened to reach, never an unbounded shape.
 
 Key properties the fixed-batch `ServeEngine` lacks:
 
@@ -178,6 +194,63 @@ class ContinuousEngine:
             self._prefills[bucket] = fn
         return fn
 
+    # ------------------------------------------------- preemption / resume
+    def _ensure_blocks(self, req: ServeRequest) -> None:
+        """Grow req's block table to cover its next decode write (position
+        `lengths[slot]`), preempting victims while the pool is dry.  The
+        submit-time guard (single-request worst case fits the pool) makes
+        the loop terminate: once every other active request is evicted,
+        req owns every allocated block and extend cannot fail."""
+        need_rows = int(self._lengths[req.slot]) + 1
+        while not self.cache.alloc.extend(req.rid, need_rows):
+            victim = self.scheduler.victim_for_preemption(exclude_rid=req.rid)
+            if victim is None:
+                raise MemoryError(
+                    f"request {req.rid} cannot grow to {need_rows} rows with "
+                    "no victims left — submit() guard violated")
+            self._preempt(victim)
+
+    def _preempt(self, victim: ServeRequest) -> None:
+        """Swap the victim's KV out to host, free its blocks + slot, queue
+        it for resume."""
+        slot = victim.slot
+        nbytes = self.cache.swap_out(victim.rid)
+        self.scheduler.preempt(victim, self.now_fn())
+        self._reset_slot(slot)
+        self.metrics.record_preemption(nbytes)
+
+    def _resume(self, req: ServeRequest) -> None:
+        """Swap a re-admitted request's KV back in: scatter the host buffer
+        into the freshly allocated blocks via the SAME jitted commit program
+        the bucketed prefill uses (host blocks padded to the power-of-two
+        bucket, padding ids pointing at the null sink), then restore the
+        slot's host state.  No forward pass — no token is recomputed."""
+        t0 = time.perf_counter()
+        k_host, v_host = self.cache.take_swapped(req.rid)
+        nbytes = k_host.nbytes + v_host.nbytes   # before bucket padding
+        table = self.cache.alloc.tables[req.rid]
+        nb = k_host.shape[1]
+        assert nb == len(table)
+        bs = self.kv_cfg.block_size
+        nb_pad = self._bucket(nb * bs) // bs
+        ids = np.full((nb_pad,), NULL_BLOCK, np.int32)
+        ids[:nb] = table
+        if nb_pad > nb:
+            pad = np.zeros(k_host.shape[:1] + (nb_pad - nb,)
+                           + k_host.shape[2:], k_host.dtype)
+            k_host = np.concatenate([k_host, pad], axis=1)
+            v_host = np.concatenate([v_host, pad], axis=1)
+        L = k_host.shape[0]
+        ks = jnp.asarray(k_host.reshape(L, 1, nb_pad * bs, *k_host.shape[3:]))
+        vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
+        self.cache.k, self.cache.v = self._commit(
+            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+        self.metrics.prefill_time_s += time.perf_counter() - t0
+        self.metrics.record_resume(nbytes, req.last_stall_s)
+        slot = req.slot
+        self._lengths[slot] = req.prompt_len + len(req.output) - 1
+        self._last_tok[slot] = req.output[-1]
+
     def _prefill(self, req: ServeRequest, now: float) -> None:
         plen = req.prompt_len
         bucket = self._bucket(plen)
@@ -228,12 +301,24 @@ class ContinuousEngine:
         self._done.append(req)
 
     def step(self) -> bool:
-        """One engine step: admit + prefill new arrivals, then one decode
-        step over every active slot.  Returns False when nothing ran."""
+        """One engine step: admit (resumes swap back in, new arrivals
+        prefill), grow every active request's block table to cover its next
+        token (preempting victims if the pool is dry), then one decode step
+        over every surviving slot.  Returns False when nothing ran."""
         now = self.now_fn()
         admitted = self.scheduler.admit(now)
         for req in admitted:
-            self._prefill(req, now)
+            if self.cache.is_swapped(req.rid):
+                self._resume(req)
+            else:
+                self._prefill(req, now)
+
+        # on-demand growth: every active request secures the block its next
+        # decode write lands in.  A request preempted as some later grower's
+        # victim drops out of this step's batch (slot is None by then).
+        for req in [r for r in self.scheduler.slots if r is not None]:
+            if req.slot is not None:
+                self._ensure_blocks(req)
 
         active = [r for r in self.scheduler.slots if r is not None]
         if not active:

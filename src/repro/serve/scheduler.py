@@ -4,21 +4,35 @@ The decode program is compiled once for a fixed slot count; a *slot* is one
 row of that batch.  Each engine step the scheduler:
 
   1. retires finished requests (slots + KV blocks return to the pool),
-  2. admits waiting requests into free slots — FIFO, gated on the paged
-     KV-cache having enough free blocks for the request's *worst case*
-     KV footprint (see `kv_rows`), so an admitted request can never die
-     of cache exhaustion mid-decode and no preemption machinery is needed,
-  3. hands the engine the set of newly admitted requests to prefill.
+  2. admits waiting requests into free slots — resumes first (a preempted
+     request re-enters before any new arrival), then FIFO arrivals, gated
+     on the paged KV-cache having enough free blocks for the request's
+     *prompt* (not prompt+budget): KV grows on demand during decode
+     (`BlockAllocator.extend`, one block at a time), so admission reserves
+     only what prefill will actually write,
+  3. hands the engine the set of newly admitted requests to prefill (new
+     arrivals) or swap back in (resumes).
+
+When the pool runs dry mid-decode — a growing request cannot extend — the
+scheduler picks a preemption *victim*: the most recently admitted active
+request (LIFO), preferring the one with the most remaining budget among
+same-step admissions.  The victim's KV blocks are swapped out to a host
+buffer by the engine and the request joins the resume queue; the submit-time
+guard (a single request's worst case must fit the pool alone) makes this
+loop always terminate — preempting every other active request frees enough
+blocks for any admitted request to finish.
 
 Requests that arrive while all slots are busy (or the pool is dry) simply
-wait — overload degrades to queueing delay, never to an error.  Per-slot
-position tracking is length-based (no left-padding anywhere): slot i's next
-token lands at position `lengths[i]`, independent of every other slot.
+wait — overload degrades to queueing delay (plus preemption under pool
+pressure), never to an error.  Per-slot position tracking is length-based
+(no left-padding anywhere): slot i's next token lands at position
+`lengths[i]`, independent of every other slot.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -40,6 +54,11 @@ class ServeRequest:
     # generation state
     output: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # preemption state
+    preemptions: int = 0
+    preempted_time: Optional[float] = None  # set while off-slot awaiting resume
+    stall_s: float = 0.0                    # total time spent preempted
+    last_stall_s: float = 0.0               # stall of the most recent resume
 
     @property
     def prompt_len(self) -> int:
@@ -50,12 +69,24 @@ class ServeRequest:
         return self.finish_time is not None
 
     @property
+    def remaining_budget(self) -> int:
+        return self.max_new_tokens - len(self.output)
+
+    @property
     def latency_s(self) -> float:
-        return (self.finish_time or 0.0) - self.arrival_time
+        """Completion latency; NaN until the request finishes (a finite
+        value here for an unfinished request would silently poison any
+        aggregate it lands in)."""
+        if self.finish_time is None:
+            return math.nan
+        return self.finish_time - self.arrival_time
 
     @property
     def ttft_s(self) -> float:
-        return (self.first_token_time or 0.0) - self.arrival_time
+        """Time to first token; NaN until the first token exists."""
+        if self.first_token_time is None:
+            return math.nan
+        return self.first_token_time - self.arrival_time
 
 
 class ContinuousScheduler:
@@ -67,6 +98,7 @@ class ContinuousScheduler:
         self.kv_cfg = kv_cfg
         self.alloc = alloc
         self.waiting: Deque[ServeRequest] = deque()
+        self.resumed: Deque[ServeRequest] = deque()   # preempted, to re-admit
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
 
     # ------------------------------------------------------------- queries
@@ -79,8 +111,13 @@ class ContinuousScheduler:
         return len(self.waiting)
 
     @property
+    def num_preempted(self) -> int:
+        return len(self.resumed)
+
+    @property
     def has_work(self) -> bool:
-        return self.num_active > 0 or self.num_waiting > 0
+        return (self.num_active > 0 or self.num_waiting > 0
+                or self.num_preempted > 0)
 
     def slot_rids(self) -> List[Optional[int]]:
         return [r.rid if r is not None else None for r in self.slots]
@@ -97,6 +134,8 @@ class ContinuousScheduler:
         if req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1")
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
         if self.kv_rows(req) > self.kv_cfg.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + "
@@ -105,35 +144,80 @@ class ContinuousScheduler:
         need = self.kv_cfg.blocks_for(self.kv_rows(req))
         usable = self.kv_cfg.num_blocks - 1
         if need > usable:
-            # would never be admittable even with an empty pool — reject now
-            # instead of letting the engine wait on it forever
+            # could never finish even running alone on an empty pool —
+            # reject now instead of preempting everyone and still dying.
+            # (This guard is also what makes preemption terminate: with
+            # every other request evicted, any admitted request can always
+            # extend to its worst case.)
             raise ValueError(
                 f"request {req.rid}: needs {need} KV blocks but the pool "
                 f"only has {usable}")
         self.waiting.append(req)
 
     def admit(self, now: float) -> List[ServeRequest]:
-        """Move waiting requests into free slots; returns the newly admitted
-        (to be prefilled by the engine).  FIFO with head-of-line blocking:
-        a request too large for the current free pool also holds back the
-        requests behind it, preserving arrival order fairness."""
+        """Move waiting/preempted requests into free slots; returns the
+        newly admitted (resumes carry swapped-out KV the engine must commit
+        before decoding; fresh admissions are prefilled).
+
+        Resume-first with head-of-line blocking on BOTH queues: a preempted
+        request re-enters before any newer arrival, and a request too large
+        for the current free pool also holds back the requests behind it,
+        preserving admission-order fairness.  Fresh admissions are gated on
+        the *prompt* footprint only — decode KV grows on demand."""
         admitted: List[ServeRequest] = []
         for slot in range(self.max_slots):
-            if self.slots[slot] is not None or not self.waiting:
+            if self.slots[slot] is not None:
                 continue
-            req = self.waiting[0]
-            if req.arrival_time > now:
-                break  # not yet arrived (simulated-arrival workloads)
-            need = self.kv_cfg.blocks_for(self.kv_rows(req))
-            if not self.alloc.can_allocate(need):
+            if self.resumed:
+                req = self.resumed[0]
+                if not self.alloc.can_allocate(self.alloc.swapped[req.rid]):
+                    break   # nobody jumps a preempted request's re-admission
+                self.resumed.popleft()
+                self.alloc.swap_in(req.rid)
+                req.last_stall_s = now - req.preempted_time
+                req.stall_s += req.last_stall_s
+                req.preempted_time = None
+            elif self.waiting:
+                req = self.waiting[0]
+                if req.arrival_time > now:
+                    break  # not yet arrived (simulated-arrival workloads)
+                need = self.kv_cfg.blocks_for(req.prompt_len)
+                if not self.alloc.can_allocate(need):
+                    break
+                self.waiting.popleft()
+                self.alloc.allocate(req.rid, need)
+                req.admitted_time = now
+            else:
                 break
-            self.waiting.popleft()
-            self.alloc.allocate(req.rid, need)
             req.slot = slot
-            req.admitted_time = now
             self.slots[slot] = req
             admitted.append(req)
         return admitted
+
+    def victim_for_preemption(
+            self, exclude_rid: int) -> Optional[ServeRequest]:
+        """Deterministic victim choice when the pool runs dry: the most
+        recently admitted active request (LIFO — oldest work is never the
+        one rolled back), preferring the largest remaining budget among
+        requests admitted at the same instant (the long-tail request has
+        the most KV growth still ahead of it), then the highest rid."""
+        cands = [r for r in self.slots
+                 if r is not None and r.rid != exclude_rid]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.admitted_time,
+                                         r.remaining_budget, r.rid))
+
+    def preempt(self, req: ServeRequest, now: float) -> None:
+        """Take `req` off its slot and queue it for resume.  The engine
+        swaps the KV blocks out (see `PagedKVCache.swap_out`) BEFORE calling
+        this; here is only the slot/queue bookkeeping."""
+        assert req.slot is not None and self.slots[req.slot] is req
+        self.slots[req.slot] = None
+        req.slot = None
+        req.preemptions += 1
+        req.preempted_time = now
+        self.resumed.append(req)
 
     def retire(self, req: ServeRequest, now: float) -> None:
         """Release the request's slot and KV blocks."""

@@ -7,6 +7,19 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+try:
+    # CI runs the property suites under a pinned, derandomized profile
+    # (HYPOTHESIS_PROFILE=ci) so the fast job is reproducible run-to-run;
+    # local runs keep hypothesis' default randomized search.
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", max_examples=60, derandomize=True, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:                       # hypothesis is an optional dev dep
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

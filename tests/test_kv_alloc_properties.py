@@ -1,0 +1,126 @@
+"""Property-based `BlockAllocator` invariants (hypothesis): under arbitrary
+interleavings of allocate / extend / free / swap_out / swap_in the allocator
+must keep `free + used == total`, never hand a block to two owners, fail
+loudly on double-free, and only ever grow a table append-only (`extend`
+monotonicity).  `check_invariants()` runs after EVERY operation.
+
+The same interpreter is exercised with a fixed numpy seed (no hypothesis)
+from `test_serving_runtime.py`'s churn test; this module is the adversarial
+search on top.  CI pins the hypothesis profile via HYPOTHESIS_PROFILE=ci
+(registered in conftest.py: derandomized, fixed example budget) so the fast
+job is reproducible.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.kvcache import NULL_BLOCK, BlockAllocator, KVCacheConfig
+
+
+def run_op_sequence(cfg: KVCacheConfig, ops) -> BlockAllocator:
+    """Interpret (kind, x) pairs against a fresh allocator, asserting the
+    full invariant set after every operation.  `x` is folded into whatever
+    range the chosen operation needs, so any integer sequence is a valid
+    program — hypothesis shrinks freely."""
+    alloc = BlockAllocator(cfg)
+    usable = cfg.num_blocks - 1
+    live, swapped = [], []
+    next_rid = 1
+
+    def check(extra_free_delta=0):
+        alloc.check_invariants()
+        assert alloc.num_free + alloc.num_used == usable
+        assert sorted(alloc.tables) == sorted(live)
+        assert sorted(alloc.swapped) == sorted(swapped)
+
+    for kind, x in ops:
+        kind = kind % 5
+        if kind == 0:                                   # allocate
+            rid = next_rid
+            next_rid += 1
+            n = x % (alloc.num_free + 2)                # may exceed the pool
+            if n > alloc.num_free:
+                with pytest.raises(MemoryError):
+                    alloc.allocate(rid, n)
+            else:
+                blocks = alloc.allocate(rid, n)
+                assert len(blocks) == n
+                assert NULL_BLOCK not in blocks
+                live.append(rid)
+        elif kind == 1 and live:                        # extend
+            rid = live[x % len(live)]
+            before = list(alloc.tables[rid])
+            target = x % (usable * cfg.block_size + 4)
+            need = max(0, cfg.blocks_for(target) - len(before))
+            ok = alloc.extend(rid, target)
+            after = alloc.tables[rid]
+            assert after[: len(before)] == before       # append-only growth
+            if ok:
+                assert len(after) == len(before) + need
+                assert len(after) * cfg.block_size >= min(
+                    target, len(before) * cfg.block_size)
+            else:
+                assert need > 0 and after == before     # dry pool: unchanged
+        elif kind == 2 and live:                        # free (+ double-free)
+            rid = live.pop(x % (len(live) + 1) - 1)
+            held = len(alloc.tables[rid])
+            freed = alloc.free(rid)
+            assert freed == held
+            with pytest.raises(KeyError):
+                alloc.free(rid)                         # idempotent-by-error
+        elif kind == 3 and live:                        # swap_out
+            rid = live.pop(x % len(live))
+            held = len(alloc.tables[rid])
+            free_before = alloc.num_free
+            assert alloc.swap_out(rid) == held
+            assert alloc.num_free == free_before + held
+            assert alloc.swapped[rid] == held
+            swapped.append(rid)
+        elif kind == 4 and swapped:                     # swap_in
+            rid = swapped[x % len(swapped)]
+            n = alloc.swapped[rid]
+            if n > alloc.num_free:
+                with pytest.raises(MemoryError):
+                    alloc.swap_in(rid)
+                assert alloc.swapped[rid] == n          # still resumable
+            else:
+                blocks = alloc.swap_in(rid)
+                assert len(blocks) == n
+                swapped.remove(rid)
+                live.append(rid)
+        check()
+
+    return alloc
+
+
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 1 << 16)), max_size=150)
+
+
+@given(num_blocks=st.integers(2, 48),
+       block_size=st.sampled_from([1, 4, 16]),
+       ops=ops_strategy)
+@settings(deadline=None)
+def test_allocator_invariants_under_random_ops(num_blocks, block_size, ops):
+    cfg = KVCacheConfig(num_blocks=num_blocks, block_size=block_size,
+                        max_blocks_per_seq=max(1, num_blocks - 1))
+    run_op_sequence(cfg, ops)
+
+
+@given(ops=ops_strategy)
+@settings(deadline=None)
+def test_allocator_drains_back_to_full_pool(ops):
+    """After any program, releasing every survivor restores the exact free
+    pool — no block is ever lost or duplicated across swap round-trips."""
+    cfg = KVCacheConfig(num_blocks=17, block_size=4, max_blocks_per_seq=16)
+    alloc = run_op_sequence(cfg, ops)
+    for rid in list(alloc.tables):
+        alloc.free(rid)
+    for rid in list(alloc.swapped):
+        del alloc.swapped[rid]
+    alloc.check_invariants()
+    assert alloc.num_free == cfg.num_blocks - 1
+    assert alloc.num_used == 0

@@ -58,19 +58,45 @@ def test_alloc_extend_and_randomized_churn():
     assert alloc.extend(7, 9)           # no-op growth stays True
     alloc.free(7)
 
+    # seeded random walk over alloc/extend/free/swap (the hypothesis suite
+    # in test_kv_alloc_properties.py searches the same space adversarially;
+    # this runs even without the optional dependency)
     rng = np.random.default_rng(0)
-    live = {}
-    for step in range(200):
-        if live and (rng.random() < 0.4 or alloc.num_free < 2):
-            rid = live.pop(list(live)[int(rng.integers(len(live)))])
+    live, swapped = [], []
+    for step in range(300):
+        op = rng.random()
+        if live and (op < 0.3 or alloc.num_free < 2):
+            rid = live.pop(int(rng.integers(len(live))))
             alloc.free(rid)
+            with pytest.raises(KeyError):
+                alloc.free(rid)                     # double-free always loud
+        elif live and op < 0.45:
+            rid = live[int(rng.integers(len(live)))]
+            before = list(alloc.tables[rid])
+            alloc.extend(rid, int(rng.integers(1, 33)))
+            assert alloc.tables[rid][: len(before)] == before
+        elif live and op < 0.6:
+            rid = live.pop(int(rng.integers(len(live))))
+            held = len(alloc.tables[rid])
+            free_before = alloc.num_free
+            assert alloc.swap_out(rid) == held
+            assert alloc.num_free == free_before + held
+            swapped.append(rid)
+        elif swapped and op < 0.75:
+            rid = swapped[int(rng.integers(len(swapped)))]
+            if alloc.can_allocate(alloc.swapped[rid]):
+                n = alloc.swapped[rid]
+                assert len(alloc.swap_in(rid)) == n
+                swapped.remove(rid)
+                live.append(rid)
         else:
             rid = step + 100
             n = int(rng.integers(1, 4))
             if alloc.can_allocate(n):
                 alloc.allocate(rid, n)
-                live[rid] = rid
+                live.append(rid)
         alloc.check_invariants()
+    assert swapped or live                          # the walk exercised state
 
 
 def test_table_array_null_padding():
