@@ -9,10 +9,11 @@ the same wall clock:
                prompts pad to the provisioned maximum, and every batch
                decodes the full worst-case token budget (a static-batch
                server cannot stop per-request);
-  continuous — `ContinuousEngine`: requests prefill AND decode alongside
-               the in-flight batch in the very engine step that admits
-               them, KV lives in pages, and each request retires at
-               exactly its own budget.
+  continuous — `ContinuousEngine`: one unified token-budget step — each
+               engine step carries up to `chunk_tokens` of prompt work
+               alongside a decode token for EVERY in-flight request, KV
+               lives in pages, and each request retires at exactly its
+               own budget.
 
 Reported per engine: useful tokens/s (only the tokens each request asked
 for count), latency p50/p95 (completion - arrival), and for the continuous
@@ -27,6 +28,18 @@ simply could not run below 1.0x; on-demand growth + preemption completes
 the full workload at every size — the sweep reports tokens/s, p95,
 preemption count, swap traffic and stall time per pool size, making the
 reservation-vs-preemption trade measurable.
+
+A fourth section (`--interference`) is the PREFILL-INTERFERENCE sweep: a
+Poisson mix of long and short prompts replayed through a chunked engine
+(`chunk_tokens` budget slices every long prompt across steps) and an
+unchunked one (whole prompt in one chunk) under a deterministic virtual
+clock whose per-step cost is linear in the tokens the step carries
+(c0 + c_tok x (decode rows + chunk tokens)).  The headline number is
+decode TIME-BETWEEN-TOKENS p95: every in-flight decoder samples each of
+its steps' cost as one inter-token gap, so a prompt monopolizing a step
+is a gap spike suffered by the whole decode batch.  Chunking must hold
+decode TBT p95 at or below the unchunked engine's while trading a bounded
+amount of long-prompt TTFT (their prefill now spans several steps).
 
 A second section (`--lanes`) reports the PER-LANE breakdown of the plan's
 stage matmul dispatch: the same Poisson workload replayed through an
@@ -218,11 +231,12 @@ def lane_breakdown(model, params, mesh, cfg, rcfg: RuntimeConfig,
 
 
 def warm_engine(engine: ContinuousEngine, vocab: int, prompt_hi: int) -> None:
-    """Compile the prefill buckets + decode program outside a timed replay."""
+    """Compile THE unified step program outside a timed replay.  One short
+    request suffices: chunk geometry is data, so every prompt length —
+    longer than any seen here included — reuses the same program."""
     rng = np.random.default_rng(0)
-    for s in (8, prompt_hi // 2, prompt_hi):
-        engine.submit(rng.integers(0, vocab, size=s).astype(np.int32),
-                      max_new_tokens=2)
+    engine.submit(rng.integers(0, vocab, size=min(8, prompt_hi))
+                  .astype(np.int32), max_new_tokens=2)
     engine.run()
     engine.reset_metrics()
 
@@ -251,7 +265,7 @@ def pressure_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig, workload,
         r.update(pool_blocks=usable, factor=f, errors=errors,
                  preemptions=int(s["preemptions"]),
                  swap_mb=(s["swap_out_bytes"] + s["swap_in_bytes"]) / 2**20,
-                 stall_s=s["stall_s"])
+                 stall_s=s["stall_s"], swap_in_time_s=s["swap_in_time_s"])
         results[f] = r
         if verbose:
             print(f"pool {f:4.2f}x ({usable:3d} blocks): "
@@ -259,6 +273,7 @@ def pressure_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig, workload,
                   f"p95 {r['latency_p95_s']:6.2f}s | "
                   f"preemptions {r['preemptions']:3d} | "
                   f"swap {r['swap_mb']:6.2f} MiB | "
+                  f"swap-in {r['swap_in_time_s']:5.2f}s | "
                   f"stall {r['stall_s']:5.2f}s | errors {errors}")
     full = results[min(factors)]
     if verbose:
@@ -268,11 +283,124 @@ def pressure_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig, workload,
     return results
 
 
+# ------------------------------------------------ prefill-interference sweep
+def interference_workload(rng: np.random.Generator, n: int, vocab: int,
+                          rate_hz: float, short_hi: int = 12,
+                          long_len: int = 64, long_frac: float = 0.5,
+                          new_lo: int = 8, new_hi: int = 16):
+    """Poisson mix of short (decode-dominated) and long (prefill-heavy)
+    prompts — the workload where a monopolizing prefill shows up as
+    decode-side head-of-line latency.  Built on `make_workload` (same
+    arrival process); a `long_frac` share of requests get their prompt
+    replaced by a `long_len`-token one and tagged `long`."""
+    out = make_workload(rng, n, vocab, rate_hz, prompt_lo=4,
+                        prompt_hi=short_hi, new_lo=new_lo, new_hi=new_hi)
+    for w in out:
+        w["long"] = bool(rng.random() < long_frac)
+        if w["long"]:
+            w["prompt"] = rng.integers(0, vocab, size=long_len).astype(np.int32)
+    return out
+
+
+def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
+                    chunk_tokens, c0: float = 0.25, c_tok: float = 0.125):
+    """Replay the workload under a deterministic virtual clock: each step
+    costs c0 + c_tok x (decode rows + chunk tokens it carried).  Same cost
+    model for both engines, so the comparison isolates SCHEDULING — how
+    prompt work is sliced — from kernel speed.
+
+    The headline interference metric is the DECODE TIME-BETWEEN-TOKENS
+    distribution: every (in-flight decoder, step) pair contributes that
+    step's cost as one inter-token gap sample.  A prompt monopolizing a
+    step shows up as a gap spike suffered by every concurrent decoder —
+    exactly the head-of-line stall chunking exists to remove."""
+    import dataclasses as _dc
+
+    clock = {"t": 0.0}
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                           _dc.replace(rcfg, chunk_tokens=chunk_tokens),
+                           now_fn=lambda: clock["t"])
+    by_rid = {}
+    for w in workload:
+        rid = eng.submit(w["prompt"], max_new_tokens=w["max_new"],
+                         arrival_time=w["arrival"])
+        by_rid[rid] = w
+    eng.metrics.start_time = 0.0
+    tbt_gaps: List[float] = []
+    with eng.mesh:
+        while eng.scheduler.has_work:
+            n_occ = len(eng.metrics.slot_occupancy)
+            n_chunk = eng.metrics.chunk_tokens_committed
+            if eng.step():
+                dec_rows = 0
+                if len(eng.metrics.slot_occupancy) > n_occ:
+                    dec_rows = round(eng.metrics.slot_occupancy[-1]
+                                     * eng.cfg.max_slots)
+                chunk_toks = eng.metrics.chunk_tokens_committed - n_chunk
+                cost = c0 + c_tok * (dec_rows + chunk_toks)
+                clock["t"] += cost
+                tbt_gaps.extend([cost] * dec_rows)
+            else:
+                clock["t"] += c0 / 4          # idle tick (future arrivals)
+    eng.metrics.end_time = clock["t"]
+    done = eng._done
+    short = [r.latency_s for r in done if not by_rid[r.rid]["long"]]
+    long_ttft = [r.ttft_s for r in done if by_rid[r.rid]["long"]]
+    s = eng.metrics.summary()
+    return {
+        "decode_tbt_p50_s": percentile(tbt_gaps, 50),
+        "decode_tbt_p95_s": percentile(tbt_gaps, 95),
+        "decode_tbt_max_s": max(tbt_gaps, default=0.0),
+        "short_latency_p95_s": percentile(short, 95),
+        "long_ttft_p95_s": percentile(long_ttft, 95),
+        "tokens_per_s": s["tokens_per_s"],
+        "chunks": int(s["prefill_chunks"]),
+        "preemptions": int(s["preemptions"]),
+        "done": len(done),
+    }
+
+
+def interference_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
+                       requests: int = 24, seed: int = 0,
+                       chunk_tokens: int = 16, rate_hz: float = 0.25,
+                       verbose: bool = True) -> dict:
+    """Decode p95 with vs without chunked prefill on a long/short Poisson
+    mix (virtual clock — deterministic).  The unchunked engine carries a
+    whole long prompt in ONE step, so every in-flight decoder's inter-token
+    gap spikes by the full prompt's cost; the chunked engine bounds each
+    step's prompt work at `chunk_tokens`, holding decode TBT p95 down at a
+    bounded TTFT cost to the long prompts themselves (their prefill now
+    spans several steps) — the reservation-free version of the trade the
+    ROADMAP's "chunked prefill" open item asked for."""
+    rng = np.random.default_rng(seed)
+    long_len = min(64, rcfg.max_seq - 17)
+    workload = interference_workload(rng, requests, cfg.vocab, rate_hz,
+                                     long_len=long_len)
+    results = {}
+    for label, ct in (("chunked", chunk_tokens), ("unchunked", None)):
+        r = _replay_virtual(model, params, mesh, rcfg, workload, ct)
+        results[label] = r
+        if verbose:
+            print(f"{label:10s}: decode tbt p50 {r['decode_tbt_p50_s']:5.2f}  "
+                  f"p95 {r['decode_tbt_p95_s']:5.2f}  "
+                  f"max {r['decode_tbt_max_s']:5.2f} | "
+                  f"long ttft p95 {r['long_ttft_p95_s']:6.2f} | "
+                  f"short lat p95 {r['short_latency_p95_s']:6.2f} | "
+                  f"chunks {r['chunks']:3d} | {r['done']} reqs (virtual s)")
+    if verbose:
+        ok = (results["chunked"]["decode_tbt_p95_s"]
+              <= results["unchunked"]["decode_tbt_p95_s"])
+        print("prefill-interference check (chunked decode TBT p95 <= "
+              f"unchunked): {'PASS' if ok else 'MISS'}")
+    return results
+
+
 # -------------------------------------------------------------------- harness
 def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           rate_hz: float = 0.0, verbose: bool = True,
           lanes: bool = True, lane_requests: int = 12,
-          pressure: bool = True) -> dict:
+          pressure: bool = True, interference: bool = True,
+          interference_requests: int = 24) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
     model = build_model(cfg)
@@ -287,7 +415,8 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
                          max_new_tokens=new_hi)
     engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg)
 
-    # Warm-up: compile every prefill bucket + the decode program.
+    # Warm-up: compile THE unified step program (mixed lengths only warm
+    # the host paths — chunk geometry is data, nothing else ever compiles).
     warm = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
             for s in (8, prompt_hi // 2, prompt_hi)] * 2
     for p in warm:
@@ -335,6 +464,13 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
               f"(target >= 1.3x at equal-or-better p95: "
               f"{'PASS' if speedup >= 1.3 and cont['latency_p95_s'] <= fixed['latency_p95_s'] else 'MISS'})")
     out = {"fixed": fixed, "continuous": cont, "speedup": speedup}
+    if interference:
+        if verbose:
+            print("--- prefill-interference sweep (long/short Poisson mix; "
+                  "chunked vs unchunked prefill; virtual clock) ---")
+        out["interference"] = interference_sweep(
+            model, params, mesh, cfg, rcfg,
+            requests=interference_requests, seed=seed, verbose=verbose)
     if pressure:
         if verbose:
             print("--- pool-pressure sweep (same Poisson workload; pool "
@@ -358,10 +494,17 @@ def run(csv_rows):
                      f"p95={r['continuous']['latency_p95_s']:.2f}s"))
     csv_rows.append(("serve_speedup_x", r["speedup"],
                      "continuous vs fixed, same Poisson workload"))
+    for label, ir in r.get("interference", {}).items():
+        csv_rows.append((f"serve_interference_{label}_decode_tbt_p95_s",
+                         ir["decode_tbt_p95_s"],
+                         f"tbt_max={ir['decode_tbt_max_s']:.2f} "
+                         f"long_ttft_p95={ir['long_ttft_p95_s']:.2f} "
+                         f"chunks={ir['chunks']} virtual-clock"))
     for f, pr in r.get("pressure", {}).items():
         csv_rows.append((f"serve_pool_{f:.2f}x_tok_s", pr["tokens_per_s"],
                          f"preemptions={pr['preemptions']} "
                          f"swap_mb={pr['swap_mb']:.2f} "
+                         f"swap_in_s={pr['swap_in_time_s']:.3f} "
                          f"errors={pr['errors']}"))
     for label, lr in r.get("lanes", {}).items():
         lanes = ",".join(f"{k}:{v}" for k, v in sorted(lr["lanes"].items()))
@@ -382,7 +525,13 @@ if __name__ == "__main__":
                     help="workload prefix replayed per lane in the breakdown")
     ap.add_argument("--no-pressure", action="store_true",
                     help="skip the pool-pressure (preemption) sweep")
+    ap.add_argument("--no-interference", action="store_true",
+                    help="skip the prefill-interference (chunking) sweep")
+    ap.add_argument("--interference-requests", type=int, default=24,
+                    help="requests in the long/short interference mix")
     args = ap.parse_args()
     bench(args.requests, args.slots, args.seed, args.rate,
           lanes=not args.no_lanes, lane_requests=args.lane_requests,
-          pressure=not args.no_pressure)
+          pressure=not args.no_pressure,
+          interference=not args.no_interference,
+          interference_requests=args.interference_requests)

@@ -3,8 +3,9 @@
 Boots a small qwen3-family LM, briefly trains it on the synthetic pipeline
 so decode produces the learnable next-token structure, then serves a queue
 of requests through the continuous-batching runtime: WPK inference plan ->
-plan-aware router -> slot scheduler -> paged KV-cache -> one jitted decode
-program that requests join and leave in flight.
+plan-aware router -> slot scheduler -> paged KV-cache -> ONE jitted
+unified step (token-budget chunked-prefill lane + the decode batch) that
+requests join and leave in flight.
 
 Run:  PYTHONPATH=src python examples/serve_inference.py [--requests 12]
 """
@@ -68,6 +69,7 @@ def main() -> None:
         t0 = time.perf_counter()
         plan = build_serve_plan(
             cfg, prefill_len=32, slots=rcfg.max_slots, max_seq=rcfg.max_seq,
+            chunk_tokens=rcfg.chunk_width,
             tuner=Tuner(methods=("random",), random_budget=16))
         router = PlanRouter(plan)
         print(f"serve plan tuned in {time.perf_counter() - t0:.1f}s: "

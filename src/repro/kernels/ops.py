@@ -27,6 +27,7 @@ from repro.kernels.attention import (
     flash_attention_padded,
     flash_decode_paged,
     flash_decode_padded,
+    flash_prefill_paged,
 )
 from repro.kernels.conv2d import conv2d_direct
 from repro.kernels.fused import fused_elementwise as _fused_elementwise
@@ -225,6 +226,45 @@ def attention_decode_paged(
         outs.append(flash_decode_paged(qg, kg, vg, lengths, block_tables,
                                        scale=scale, interpret=interpret))
     return jnp.concatenate(outs, axis=1)
+
+
+def attention_prefill_paged(
+    q: jnp.ndarray,             # (1, C, H, D) one request's chunk queries
+    k_pool: jnp.ndarray,        # (num_blocks, block_size, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (1, nbt) physical block ids
+    chunk_start,                # scalar int32: rows committed before the chunk
+    chunk_len,                  # scalar int32: real rows in this chunk
+    *,
+    scale: Optional[float] = None,
+    config: Config = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Paged chunked-prefill attention over the block pool (the prefill lane
+    of the unified serving step).
+
+    Same per-KV-head grouping as `attention_decode_paged`, but the query is
+    a whole prompt chunk: each row attends causally to every committed row
+    of its request (earlier chunks included) through the scalar-prefetched
+    block table.  `chunk_start`/`chunk_len` are traced scalars — chunk
+    geometry is data, so one compiled program covers every admission.  The
+    tuned `config` contributes `block_q` (prompt positions per query tile),
+    the knob the plan's `prefill_chunk` stage races."""
+    cfg = dict(_DEF_ATT, **(config or {}))
+    _, c, h, d = q.shape
+    hkv = k_pool.shape[2]
+    group = h // hkv
+    bq = min(cfg.get("block_q") or c, c)
+    total = (jnp.asarray(chunk_start, jnp.int32)
+             + jnp.asarray(chunk_len, jnp.int32))
+
+    outs = []
+    for g in range(hkv):  # per-KV-head grouping keeps the pool un-replicated
+        qg = q[0, :, g * group: (g + 1) * group]        # (C, group, D)
+        outs.append(flash_prefill_paged(
+            qg, k_pool[:, :, g], v_pool[:, :, g], block_tables[0],
+            chunk_start, total, block_q=bq, scale=scale, interpret=interpret))
+    return jnp.concatenate(outs, axis=1)[None]          # (1, C, H, D)
 
 
 def fused_elementwise(

@@ -292,72 +292,76 @@ def paged_pool_sharding(model, mesh: Mesh, rules: ShardingRules):
     return NamedSharding(mesh, rules.spec(axes))
 
 
-def jit_paged_prefill_step(model, mesh: Mesh, rules: ShardingRules,
-                           batch_specs, attn_backend: str = "xla",
-                           attn_config=None, matmul_table=None,
-                           interpret: bool = True):
-    """(params, batch, lengths) -> (logits (B,1,V), ks, vs) — the bucketed
-    prefill of the continuous runtime.  One compile per prompt-length bucket;
-    `lengths` picks each row's true last token out of the right-padding.
-    The attention backend/config is the plan's *prefill-stage* choice, and
-    `matmul_table` (role -> (backend, config), from
-    `PlanRouter.matmul_table('prefill')`) routes qkv/mlp/lm_head through the
-    plan's stage matmul lanes — both are closed over, so they are static at
-    trace time and baked into the compiled bucket program."""
-    rules = prune_for_mesh(rules, mesh)
-    p_shard, _ = make_state_shardings(model, mesh, rules, None)
-    b_shard = make_batch_shardings(mesh, rules, batch_specs)
-    len_shard = NamedSharding(mesh, rules.spec(("batch",)))
+def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
+                     decode_attn_backend: str = "xla",
+                     chunk_attn_backend: str = "xla", chunk_attn_config=None,
+                     decode_matmul_table=None, chunk_matmul_table=None,
+                     interpret: bool = True):
+    """(params, k_pool, v_pool,
+        dec_tables, dec_lengths, dec_tokens,     # decode lane: every slot
+        ch_tokens, ch_tables, ch_start, ch_len)  # prefill lane: one chunk
+        -> (dec_next (S,), ch_next scalar, k_pool, v_pool)
 
-    def prefill_step(params, batch, lengths):
-        with activation_rules(rules), \
-                matmul_dispatch(matmul_table, interpret=interpret):
-            return model.prefill_kv(params, batch, lengths,
-                                    attn_backend=attn_backend,
-                                    attn_config=attn_config,
-                                    attn_interpret=interpret)
+    THE serving step program: one engine step = one invocation.  Each step
+    carries up to `chunk_tokens` of pending prompt work (ch_tokens is a
+    fixed-width (1, C) chunk; ch_start/ch_len are traced scalars describing
+    which slice of which prompt it is) alongside a decode token for every
+    in-flight slot.  Both lanes share the paged pool: the chunk lane
+    scatters its K/V rows into the chunk request's blocks (committed
+    incrementally, chunk by chunk) and the decode lane appends one row per
+    active slot, all inside a single compiled program.
 
-    return jax.jit(prefill_step, in_shardings=(p_shard, b_shard, len_shard),
-                   out_shardings=None)
+    Every argument shape is static in (slots, pool blocks, table width,
+    chunk budget), so admission, chunk progress, retirement, preemption and
+    resume are pure data updates — this program compiles exactly ONCE and
+    the power-of-two prefill-bucket ladder of the old two-program runtime
+    is gone entirely.  Idle lanes are masked by data: a step with no chunk
+    passes ch_len=0 with an all-null chunk table (rows divert to the sink
+    block), and slots that are empty or still prefilling carry all-null
+    decode tables with length 0.  Masking hides results, not FLOPs — an
+    idle chunk lane still executes at its compiled width, so the chunk
+    budget is a price every step pays (keep it modest; see
+    RuntimeConfig.chunk_tokens).
 
-
-def jit_paged_decode_step(model, mesh: Mesh, rules: ShardingRules,
-                          attn_backend: str = "xla", matmul_table=None,
-                          interpret: bool = True):
-    """(params, k_pool, v_pool, block_tables, lengths, tokens)
-        -> (logits, k_pool, v_pool)
-
-    The continuous-batching decode program: batch dim = slot count, cache =
-    shared block pool.  All argument shapes are static in (slots, pool
-    blocks, table width), so the scheduler admits/retires requests by
-    editing the *data* — this program never recompiles mid-serve.  The
-    attention backend (XLA gather vs block-table Pallas kernel) and the
-    `matmul_table` (the plan's decode-stage qkv/mlp/lm_head lane choices,
-    from `PlanRouter.matmul_table('decode')`) are closed over — static at
-    trace time, so plan dispatch adds zero per-step cost and admission
-    still never recompiles."""
+    The attention backends and the per-stage matmul tables (the plan's
+    `decode` and `prefill_chunk` stage choices) are closed over — static at
+    trace time, zero per-step dispatch cost."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     pool_shard = paged_pool_sharding(model, mesh, rules)
     slot_shard = NamedSharding(mesh, rules.spec(("batch",)))
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
-    def decode_step(params, k_pool, v_pool, block_tables, lengths, tokens):
-        with activation_rules(rules), \
-                matmul_dispatch(matmul_table, interpret=interpret):
-            logits, k_pool, v_pool = model.decode_step_paged(
-                params, k_pool, v_pool, block_tables, lengths, tokens,
-                attn_backend=attn_backend, attn_interpret=interpret)
-        # greedy sampling fused into the step: one device program per token,
-        # no separate argmax dispatch on the host loop's critical path
+    def unified_step(params, k_pool, v_pool, dec_tables, dec_lengths,
+                     dec_tokens, ch_tokens, ch_tables, ch_start, ch_len):
+        with activation_rules(rules):
+            # prefill lane: one request's prompt chunk, K/V committed to its
+            # blocks in-program (no separate commit dispatch)
+            with matmul_dispatch(chunk_matmul_table, interpret=interpret):
+                ch_logits, k_pool, v_pool = model.prefill_chunk_paged(
+                    params, k_pool, v_pool, ch_tables, ch_tokens,
+                    ch_start, ch_len, attn_backend=chunk_attn_backend,
+                    attn_config=chunk_attn_config, attn_interpret=interpret)
+            # decode lane: one token for every slot (the two lanes touch
+            # disjoint blocks — a request never prefills and decodes in the
+            # same step — so XLA is free to schedule them together)
+            with matmul_dispatch(decode_matmul_table, interpret=interpret):
+                logits, k_pool, v_pool = model.decode_step_paged(
+                    params, k_pool, v_pool, dec_tables, dec_lengths,
+                    dec_tokens, attn_backend=decode_attn_backend,
+                    attn_interpret=interpret)
+        # greedy sampling fused for both lanes: ch_next is the first token
+        # of the chunk's request, valid only when the chunk completes its
+        # prompt (the host consumes it exactly then)
         nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        return nxt, k_pool, v_pool
+        ch_next = jnp.argmax(ch_logits[0, -1], -1).astype(jnp.int32)
+        return nxt, ch_next, k_pool, v_pool
 
     return jax.jit(
-        decode_step,
+        unified_step,
         in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
-                      row_shard),
-        out_shardings=(None, pool_shard, pool_shard),
+                      row_shard, None, None, None, None),
+        out_shardings=(None, None, pool_shard, pool_shard),
         donate_argnums=(1, 2),
     )
 
@@ -367,18 +371,14 @@ def jit_commit_prefill(model, mesh: Mesh, rules: ShardingRules):
 
     Scatter one request's per-layer K/V (L, 1, S_pad, Hkv, hd) into the
     physical pool at `block_ids` (S_pad/block_size entries; padding entries
-    point at the null sink block).  Donates the pools; one compile per
-    power-of-two bucket.
+    point at the null sink block).  Donates the pools.
 
-    This is the single commit path for BOTH ways KV enters the pool:
-      * prefill — a freshly admitted request's prompt KV, computed by the
-        bucketed prefill step;
-      * resume  — a preempted request's swapped-out KV, read back from the
-        host buffer and scattered into its freshly allocated blocks
-        (`ContinuousEngine._resume`).  Resume pads to the same power-of-two
-        bucket ladder as prefill, so commit compiles stay bounded by the
-        ladder height (a resume can at most warm a rung no prompt reached)
-        and the decode program itself never recompiles."""
+    Since the unified step commits prefill KV in-program (chunk by chunk),
+    this is now only the *resume* path: a preempted request's swapped-out
+    KV, read back from the host buffer and scattered into its freshly
+    allocated blocks (`ContinuousEngine._resume`).  Resume always pads to
+    the full table width (max_blocks_per_seq blocks), so exactly one shape
+    ever traces — no bucket ladder anywhere in the serving runtime."""
     rules = prune_for_mesh(rules, mesh)
     pool_shard = paged_pool_sharding(model, mesh, rules)
 

@@ -261,6 +261,74 @@ def attn_decode(
     return y, k_cache, v_cache
 
 
+# ----------------------------------------- paged (block-table) chunked prefill
+def attn_prefill_chunk_paged(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                 # (1, C, d) — one request's prompt chunk
+    k_pool: jnp.ndarray,            # (num_blocks, block_size, Hkv, hd)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,      # (1, nbt) physical block ids
+    positions: jnp.ndarray,         # (1, C[, 3]) absolute RoPE positions
+    chunk_start,                    # scalar int32: rows committed before chunk
+    chunk_len,                      # scalar int32: real rows in this chunk
+    *,
+    backend: str = "xla",
+    backend_config=None,
+    interpret: bool = True,
+):
+    """Chunked-prefill attention against the *paged* KV pool.
+
+    The chunk's K/V rows are scattered straight into the request's blocks
+    (positions `chunk_start + i`; padding rows past `chunk_len` divert to
+    the reserved null-sink block), then each query row attends causally to
+    every committed row of the request — earlier chunks included — either
+    through an XLA gather of the slot's logical pool view or through the
+    block-table-aware Pallas kernel (`backend='pallas_attention'`,
+    `kernels.ops.attention_prefill_paged`).  Chunk geometry is carried by
+    traced scalars, so every chunk of every prompt reuses one program."""
+    b, c, _ = x.shape
+    block_size = k_pool.shape[1]
+    nbt = block_tables.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    # incremental commit: row i of the chunk lands at absolute position
+    # chunk_start + i in the request's logical sequence
+    pos = jnp.asarray(chunk_start, jnp.int32) + jnp.arange(c, dtype=jnp.int32)
+    blk = block_tables[0, jnp.clip(pos // block_size, 0, nbt - 1)]
+    blk = jnp.where(jnp.arange(c) < chunk_len, blk, 0)  # padding -> null sink
+    off = pos % block_size
+    k_pool = k_pool.at[blk, off].set(k_new[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new[0].astype(v_pool.dtype))
+
+    hkv, g = cfg.n_kv_heads, cfg.q_per_kv
+    if backend.startswith("pallas"):
+        from repro.kernels import ops as K
+        out = K.attention_prefill_paged(
+            q, k_pool, v_pool, block_tables, chunk_start, chunk_len,
+            config=backend_config, interpret=interpret)
+    else:
+        # XLA lane: gather the request's logical cache view from the pool.
+        # The gather width is always the full table (nbt * block_size) and
+        # the mask is purely positional, so the per-row float program is
+        # identical for every chunk split — chunked and unchunked prefill
+        # agree bitwise on this lane.
+        k_ctx = k_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
+        v_ctx = v_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
+        scale = 1.0 / np.sqrt(cfg.hd)
+        qg = q.reshape(b, c, hkv, g, cfg.hd)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                            k_ctx).astype(jnp.float32) * scale
+        kpos = jnp.arange(nbt * block_size)[None, None, None, None, :]
+        logits = jnp.where(kpos <= pos[None, None, None, :, None],
+                           logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v_ctx.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                         v_ctx).reshape(b, c, cfg.n_heads, cfg.hd)
+    y = dense(p["wo"], out.reshape(b, c, cfg.n_heads * cfg.hd))
+    return y, k_pool, v_pool
+
+
 # ---------------------------------------------------- paged (block-table) decode
 def attn_decode_paged(
     p: Params,

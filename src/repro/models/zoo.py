@@ -152,14 +152,20 @@ class DecoderLM:
 
     # ------------------------------------------------------------ positions
     def _positions(self, batch: Batch, b: int, s: int):
+        return self._position_ids(b, jnp.arange(s))
+
+    def _position_ids(self, b: int, idx: jnp.ndarray):
+        """RoPE position ids for sequence indices `idx` (any offset — the
+        chunked-prefill path passes `chunk_start + arange(C)`, so a chunk's
+        rows encode the same positions the full prompt would)."""
         cfg = self.cfg
+        s = idx.shape[0]
         if not cfg.mrope_sections:
-            return jnp.broadcast_to(jnp.arange(s), (b, s))
+            return jnp.broadcast_to(idx, (b, s))
         # M-RoPE (qwen2-vl): vision tokens index a (t=0, h, w) grid; text
         # tokens use (t, t, t) offset past the vision span.
         nv = cfg.n_vision_tokens
         grid = max(1, int(np.sqrt(nv)))
-        idx = jnp.arange(s)
         vis_h = (idx // grid).clip(0, grid - 1)
         vis_w = (idx % grid)
         t_text = jnp.maximum(idx - nv, 0) + grid  # text clock starts after grid
@@ -267,51 +273,6 @@ class DecoderLM:
         return logits, new_cache
 
     # ------------------------------------------------- paged serving path
-    def prefill_kv(self, params: Params, batch: Batch,
-                   lengths: Optional[jnp.ndarray] = None, *,
-                   attn_backend: str = "xla",
-                   attn_config: Optional[Dict[str, Any]] = None,
-                   attn_interpret: bool = True):
-        """Prefill for the paged runtime: run the (right-padded) prompts and
-        return per-layer K/V stacks instead of a monolithic cache, plus the
-        logits at each sequence's true last token (`lengths-1`) so bucket
-        padding never corrupts the first sampled token.
-
-        The attention backend/config is the *prefill-stage* choice of the
-        inference plan — chosen independently of the decode stage's.
-
-        Returns (logits (B, 1, V), ks (L, B, S, Hkv, hd), vs alike)."""
-        cfg = self.cfg
-        x = self._embed_inputs(params, batch)
-        b, s, _ = x.shape
-        positions = self._positions(batch, b, s)
-
-        def body(x, bp):
-            h = _norm(cfg, bp["attn_norm"], x)
-            y, (k, v) = A.attn_forward(bp["attn"], cfg, h, positions=positions,
-                                       causal=True, return_kv=True,
-                                       backend=attn_backend,
-                                       backend_config=attn_config,
-                                       interpret=attn_interpret)
-            x = x + y
-            h = _norm(cfg, bp["mlp_norm"], x)
-            if cfg.family == "moe":
-                x = x + F.moe_apply(bp["moe"], cfg, h, cfg.act)
-            else:
-                x = x + F.mlp_apply(bp["mlp"], h, cfg.act)
-            return x, (k, v)
-
-        x, (ks, vs) = runmode.layer_scan(_remat(cfg, body), x, params["blocks"])
-        x = _norm(cfg, params["final_norm"], x)
-        if lengths is None:
-            x_last = x[:, -1:]
-        else:
-            idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
-            x_last = jnp.take_along_axis(x, jnp.broadcast_to(
-                idx, (b, 1, x.shape[-1])), axis=1)
-        logits = lm_head_logits(params["lm_head"], x_last)
-        return logits, ks, vs
-
     def decode_step_paged(self, params: Params, k_pool: jnp.ndarray,
                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                           lengths: jnp.ndarray, tokens: jnp.ndarray,
@@ -343,6 +304,56 @@ class DecoderLM:
         x, (ks, vs) = runmode.layer_scan(body, x, (params["blocks"], k_pool, v_pool))
         x = _norm(cfg, params["final_norm"], x)
         logits = lm_head_logits(params["lm_head"], x)
+        return logits, ks, vs
+
+    def prefill_chunk_paged(self, params: Params, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                            tokens: jnp.ndarray, chunk_start, chunk_len,
+                            *, attn_backend: str = "xla",
+                            attn_config: Optional[Dict[str, Any]] = None,
+                            attn_interpret: bool = True):
+        """One prompt *chunk* of one request against the paged KV pool —
+        the prefill lane of the unified serving step.
+
+        tokens: (1, C) with rows [0, chunk_len) real (the prompt slice
+        [chunk_start, chunk_start+chunk_len)) and the rest padding.  Each
+        layer scatters the chunk's K/V into the request's blocks (padding
+        rows divert to the null sink) and attends causally over everything
+        committed so far, so a prompt split across steps computes exactly
+        the single-shot prefill.  `chunk_start`/`chunk_len` are traced
+        scalars: every chunk of every prompt is a pure data update to ONE
+        compiled program — admission never compiles.
+
+        Returns (logits (1, 1, V) at the chunk's last real row — the first
+        sampled token when the chunk completes the prompt — ks, vs)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        b, c, _ = x.shape
+        idx = jnp.asarray(chunk_start, jnp.int32) + jnp.arange(c,
+                                                               dtype=jnp.int32)
+        positions = self._position_ids(b, idx)
+
+        def body(x, layer):
+            bp, kp, vp = layer
+            h = _norm(cfg, bp["attn_norm"], x)
+            y, kp, vp = A.attn_prefill_chunk_paged(
+                bp["attn"], cfg, h, kp, vp, block_tables, positions,
+                chunk_start, chunk_len, backend=attn_backend,
+                backend_config=attn_config, interpret=attn_interpret)
+            x = x + y
+            h = _norm(cfg, bp["mlp_norm"], x)
+            if cfg.family == "moe":
+                x = x + F.moe_apply(bp["moe"], cfg, h, cfg.act)
+            else:
+                x = x + F.mlp_apply(bp["mlp"], h, cfg.act)
+            return x, (kp, vp)
+
+        x, (ks, vs) = runmode.layer_scan(body, x,
+                                         (params["blocks"], k_pool, v_pool))
+        x = _norm(cfg, params["final_norm"], x)
+        last = jnp.clip(jnp.asarray(chunk_len, jnp.int32) - 1, 0, c - 1)
+        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        logits = lm_head_logits(params["lm_head"], x_last)
         return logits, ks, vs
 
     @staticmethod

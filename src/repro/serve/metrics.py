@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 def percentile(values: List[float], p: float) -> float:
@@ -33,16 +33,28 @@ class ServeMetrics:
     tokens_out: int = 0
     requests_done: int = 0
     decode_steps: int = 0
-    prefills: int = 0
+    prefills: int = 0          # prompts whose prefill completed
+    # chunked-prefill accounting: how many unified steps carried prompt work
+    # and how many prompt tokens they committed (chunks > prefills means
+    # prompts were split across steps; TTFT under chunking spans them all)
+    prefill_chunks: int = 0
+    chunk_tokens_committed: int = 0
     # device-compute time (always wall-clock, even under a virtual engine
-    # clock) — comparable with FixedBatchEngine's prefill_s/decode_s split
+    # clock) — comparable with FixedBatchEngine's prefill_s/decode_s split.
+    # One unified program serves both lanes, so a mixed step's time goes to
+    # decode_time_s and prefill_time_s collects chunk-only steps.
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+    # swap-in scatter time used to hide inside prefill_time_s; preemption
+    # cost is its own line now
+    swap_in_time_s: float = 0.0
     # per-decode-step samples
     slot_occupancy: List[float] = dataclasses.field(default_factory=list)
     cache_occupancy: List[float] = dataclasses.field(default_factory=list)
-    start_time: float = 0.0
-    end_time: float = 0.0
+    # None = not started/ended yet.  (A 0.0 sentinel misfires for virtual
+    # clock replays that legitimately start at t=0.0.)
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
     # preemption / swap accounting (on-demand KV growth under pool pressure)
     preemptions: int = 0
     swap_out_bytes: int = 0
@@ -71,17 +83,27 @@ class ServeMetrics:
         self.tokens_out += n_tokens
         self.latencies_s.append(latency_s)
 
+    def record_chunk(self, n_tokens: int) -> None:
+        """One unified step carried a prefill chunk of `n_tokens` prompt
+        tokens (committed to the paged pool in-program)."""
+        self.prefill_chunks += 1
+        self.chunk_tokens_committed += n_tokens
+
     def record_preemption(self, nbytes: int) -> None:
         self.preemptions += 1
         self.swap_out_bytes += nbytes
 
-    def record_resume(self, nbytes: int, stall_s: float) -> None:
+    def record_resume(self, nbytes: int, stall_s: float,
+                      swap_in_s: float = 0.0) -> None:
         self.swap_in_bytes += nbytes
         self.stall_s += stall_s
+        self.swap_in_time_s += swap_in_s
 
     # ------------------------------------------------------------- summary
     @property
     def wall_s(self) -> float:
+        if self.start_time is None or self.end_time is None:
+            return 1e-9
         return max(1e-9, self.end_time - self.start_time)
 
     def tokens_per_s(self) -> float:
@@ -99,8 +121,11 @@ class ServeMetrics:
             "ttft_p95_s": percentile(self.ttfts_s, 95),
             "decode_steps": float(self.decode_steps),
             "prefills": float(self.prefills),
+            "prefill_chunks": float(self.prefill_chunks),
+            "chunk_tokens_committed": float(self.chunk_tokens_committed),
             "prefill_time_s": self.prefill_time_s,
             "decode_time_s": self.decode_time_s,
+            "swap_in_time_s": self.swap_in_time_s,
             "slot_occupancy_mean": (sum(self.slot_occupancy)
                                     / max(1, len(self.slot_occupancy))),
             "cache_occupancy_mean": (sum(self.cache_occupancy)

@@ -2,23 +2,31 @@
 
 The WPK `InferencePlan` is per-operator *and per-shape*: the matmuls and
 attention of a prefill (long query, batch 1) live at a very different point
-of the roofline than the decode step (query length 1, batch = slot count).
-The old engine "inherited" one plan for both; here the serve graph is built
-with BOTH shape families as distinct named nodes —
+of the roofline than the decode step (query length 1, batch = slot count),
+and the unified step's chunked prefill (a fixed `chunk_tokens`-wide query
+against a growing paged cache) at a third.  The old engine "inherited" one
+plan for everything; here the serve graph is built with each shape family
+as distinct named nodes —
 
-    prefill.attention   decode.attention
-    prefill.qkv_proj    decode.qkv_proj
-    prefill.mlp_up      decode.mlp_up
-    prefill.mlp_down    decode.mlp_down
-    prefill.lm_head     decode.lm_head
+    prefill.attention   decode.attention   prefill_chunk.attention
+    prefill.qkv_proj    decode.qkv_proj    prefill_chunk.qkv_proj
+    prefill.mlp_up      decode.mlp_up      prefill_chunk.mlp_up
+    prefill.mlp_down    decode.mlp_down    prefill_chunk.mlp_down
+    prefill.lm_head     decode.lm_head     prefill_chunk.lm_head
 
 — and `selection.select` races the XLA lane against every applicable tuned
-Pallas template for each of them separately.  `PlanRouter` then answers the
-runtime's dispatch questions ("which attention backend for decode?", "which
-matmul config for prefill?") by stage-qualified lookup into that plan.
-`matmul_table(stage)` bundles every stage matmul's (backend, config) into
-the dispatch table `kernels.dispatch.matmul_dispatch` installs around the
-jitted serve programs.
+Pallas template for each of them separately.  (`prefill` describes the
+whole-prompt shape family; the unified runtime executes prompts through
+`prefill_chunk`, whose attention config tunes the chunked-prefill kernel's
+`block_q` and whose matmuls are tuned at the chunk's (1, chunk_tokens, d)
+shape.)  `PlanRouter` then answers the runtime's dispatch questions
+("which attention backend for decode?", "which matmul config for the
+chunk?") by stage-qualified lookup into that plan, with `prefill_chunk`
+falling back to the `prefill` stage's choice on plans tuned before the
+stage existed.  `matmul_table(stage)` bundles every stage matmul's
+(backend, config) into the dispatch table
+`kernels.dispatch.matmul_dispatch` installs around the jitted serve
+programs.
 """
 
 from __future__ import annotations
@@ -32,14 +40,26 @@ from repro.core.plan import InferencePlan, OpChoice
 from repro.core.selection import select
 from repro.core.search.tuner import Tuner
 
-STAGES = ("prefill", "decode")
+STAGES = ("prefill", "decode", "prefill_chunk")
 
 
 def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
-                      max_seq: int, dtype: str = "float32") -> Graph:
-    """The serve-time operator set as a Graph with stage-qualified names."""
+                      max_seq: int, chunk_tokens: Optional[int] = None,
+                      dtype: str = "float32") -> Graph:
+    """The serve-time operator set as a Graph with stage-qualified names.
+
+    `chunk_tokens` is the unified step's per-step prompt-token budget (the
+    width of the prefill_chunk stage's query).  Pass the engine's RESOLVED
+    width — `RuntimeConfig.chunk_width` — so the chunk lane is tuned at
+    the shape it actually runs (in particular, an unchunked baseline
+    engine, RuntimeConfig.chunk_tokens=None, runs a max_seq-wide lane).
+    None here falls back to the RuntimeConfig field's default budget
+    (32), matching an engine built with a default RuntimeConfig."""
     g = Graph("serve")
     d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    # mirror RuntimeConfig.chunk_tokens' dataclass default so an untuned
+    # call still tunes the chunk lane at the default engine's shape
+    ct = min(chunk_tokens or 32, max_seq)
 
     # ---- prefill stage: one request, `prefill_len` query tokens
     xp = g.add_input("x_prefill", (1, prefill_len, d), dtype)
@@ -77,13 +97,33 @@ def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
     lm_d = g.add_node("matmul", [xd, wl], (slots, 1, cfg.vocab),
                       out_dtype=dtype, name="decode.lm_head")
 
+    # ---- prefill_chunk stage: one request, a `chunk_tokens`-wide slice of
+    # its prompt attending to the (up to max_seq) committed paged cache —
+    # the shape family the unified step actually runs prompts through
+    xc = g.add_input("x_chunk", (1, ct, d), dtype)
+    qkv_c = g.add_node("matmul", [xc, wq], (1, ct, (h + 2 * hkv) * hd),
+                       out_dtype=dtype, name="prefill_chunk.qkv_proj")
+    qc = g.add_input("q_chunk", (1, ct, h, hd), dtype)
+    kc = g.add_input("k_chunk", (1, max_seq, hkv, hd), dtype)
+    att_c = g.add_node("attention", [qc, kc, kc], (1, ct, h, hd),
+                       out_dtype=dtype, name="prefill_chunk.attention")
+    mlp_c = g.add_node("matmul", [xc, wu], (1, ct, cfg.d_ff),
+                       out_dtype=dtype, name="prefill_chunk.mlp_up")
+    hc = g.add_input("h_chunk", (1, ct, cfg.d_ff), dtype)
+    mlpd_c = g.add_node("matmul", [hc, wd], (1, ct, d),
+                        out_dtype=dtype, name="prefill_chunk.mlp_down")
+    lm_c = g.add_node("matmul", [xc, wl], (1, ct, cfg.vocab),
+                      out_dtype=dtype, name="prefill_chunk.lm_head")
+
     g.set_outputs([qkv_p, att_p, mlp_p, mlpd_p, lm_p,
-                   qkv_d, att_d, mlp_d, mlpd_d, lm_d])
+                   qkv_d, att_d, mlp_d, mlpd_d, lm_d,
+                   qkv_c, att_c, mlp_c, mlpd_c, lm_c])
     return g
 
 
 def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
-                     max_seq: int, chip: hw.Chip = hw.TPU_V5E,
+                     max_seq: int, chunk_tokens: Optional[int] = None,
+                     chip: hw.Chip = hw.TPU_V5E,
                      tuner: Optional[Tuner] = None,
                      dtype: str = "bfloat16") -> InferencePlan:
     """Tune the serve graph and return its stage-qualified InferencePlan."""
@@ -91,7 +131,8 @@ def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
     # tuned for (dtype-sensitive validation/cost modelling sees bf16, not a
     # float32 default that never matches the plan).
     g = build_serve_graph(cfg, prefill_len=prefill_len, slots=slots,
-                          max_seq=max_seq, dtype=dtype)
+                          max_seq=max_seq, chunk_tokens=chunk_tokens,
+                          dtype=dtype)
     return select(g, tuner=tuner, chip=chip, dtype=dtype)
 
 
@@ -114,6 +155,11 @@ class PlanRouter:
         for name, c in self.plan.choices.items():
             if name.startswith(f"{stage}.") and name.split(".", 1)[1].startswith(op):
                 return c
+        if stage == "prefill_chunk":
+            # plans tuned before the chunk stage existed: the whole-prompt
+            # prefill choice is the closest shape family — better than
+            # silently dropping to untuned XLA
+            return self._lookup("prefill", op)
         return None
 
     def attention_backend(self, stage: str) -> Tuple[str, Dict[str, Any]]:

@@ -1,45 +1,60 @@
 """Continuous-batching serving runtime (tentpole of the serving subsystem).
 
-Request lifecycle:
+Request lifecycle under the UNIFIED TOKEN-BUDGET STEP:
 
     submit() -> waiting -> [scheduler admits into a free slot if the
-                PROMPT fits the free pool — not prompt+budget]
-             -> bucketed prefill (B=1, right-padded, KV committed into the
-                paged pool at the slot's block table; first token sampled)
-             -> joins the in-flight decode batch within the SAME step()
-                (admit -> prefill -> decode all run in one engine step, so
-                an admitted request has emitted 2 tokens after one step)
-             -> greedy decode, one token per engine step; KV blocks grow
-                ON DEMAND (`BlockAllocator.extend`, one block as each
-                boundary is crossed); retiring on eos/max_new -> blocks +
-                slot freed, metrics recorded.
+                PROMPT fits the free pool — not prompt+budget; admission
+                itself runs no program]
+             -> chunked prefill: each engine step packs up to
+                `chunk_tokens` of pending prompt work — a slice of ONE
+                request's prompt, oldest admission first — into the step's
+                prefill lane, committing its KV into the paged pool
+                in-program, chunk by chunk, while the decode lane advances
+                EVERY in-flight request in the same compiled program (a
+                long prompt never stalls the decode batch)
+             -> the chunk that completes the prompt also samples the first
+                token (TTFT spans all of the prompt's chunks)
+             -> joins the decode batch the NEXT step; greedy decode, one
+                token per engine step; KV blocks grow ON DEMAND
+                (`BlockAllocator.extend`, one block as each boundary is
+                crossed); retiring on eos/max_new -> blocks + slot freed,
+                metrics recorded.
+
+One engine step = ONE invocation of one jitted program (`jit_unified_step`)
+whose shapes are static in (slots, pool blocks, table width, chunk budget):
+admission, chunk progress, retirement, preemption and resume are all pure
+data updates.  The program compiles exactly once — the power-of-two
+prefill-bucket ladder of the old two-program runtime is gone entirely, and
+with it every admission-time compile.
 
 Under pool pressure the grow path preempts: when a request cannot extend,
 the scheduler's victim (LIFO by admission, preferring the most remaining
 budget) has its KV swapped out to a host buffer, its slot and blocks are
-released, and it joins the resume queue.  Resume re-admits ahead of new
-arrivals, swaps the saved KV back into freshly allocated blocks through
-the SAME jitted commit program the bucketed prefill uses (padded to the
-same power-of-two buckets), restores the slot's length/last-token state,
-and decoding continues — no token is recomputed and the single decode
-program never recompiles (its shapes are static in slots and pool blocks;
-preemption only edits block-table *data*).  Commit programs stay bounded
-by the same power-of-two bucket ladder prefill uses: a resume can at most
-warm a ladder rung no prompt happened to reach, never an unbounded shape.
+released, and it joins the resume queue.  Mid-prefill requests preempt the
+same way — `ServeRequest.prefilled` rides along, so a resumed request
+continues its prompt at the next uncommitted token.  Resume re-admits
+ahead of new arrivals and scatters the saved KV back through the jitted
+commit program, always padded to the full table width, so exactly one
+commit shape ever traces.  No token is recomputed and the unified program
+never recompiles (preemption only edits block-table *data*).
 
 Key properties the fixed-batch `ServeEngine` lacks:
 
-  * requests are admitted into *running* decode batches — a new arrival
-    decodes alongside the in-flight batch in the very step that admits it,
-    instead of waiting for the whole previous batch to drain;
+  * requests are admitted into *running* decode batches, and long prompts
+    are time-sliced: a 200-token prompt crosses the device as
+    ceil(200/chunk_tokens) budgeted chunks, each sharing its step with the
+    whole decode batch, instead of a dedicated B=1 prefill program that
+    stalls everyone (head-of-line interference);
   * no cross-request padding: per-slot lengths/block-tables mean a 12-token
     prompt next to a 200-token prompt costs 12 tokens of KV;
-  * the decode program is compiled ONCE (static slot/pool shapes); prefill
-    compiles per power-of-two bucket, bounded by log2(max_seq) programs;
-  * the tuned `InferencePlan` drives dispatch: prefill and decode attention
-    backends AND every stage matmul (qkv_proj / mlp_up / mlp_down /
-    lm_head) are chosen separately by `PlanRouter` from a stage-qualified
-    serve plan (see `repro.serve.router` and `repro.kernels.dispatch`).
+  * ONE compiled program serves every step (static slot/pool/chunk
+    shapes); admission compiles nothing, ever;
+  * the tuned `InferencePlan` drives dispatch: the decode and chunked-
+    prefill attention backends AND every stage matmul (qkv_proj / mlp_up /
+    mlp_down / lm_head) are chosen separately by `PlanRouter` from a
+    stage-qualified serve plan — the chunk lane has its own
+    `prefill_chunk` stage whose attention config tunes the paged prefill
+    kernel's `block_q` (see `repro.serve.router`, `repro.kernels.dispatch`).
 
 The engine clock is injectable (`now_fn`) so benchmarks can replay Poisson
 arrival traces in wall time or virtual time with identical scheduling.
@@ -49,17 +64,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import ShardingRules
+from repro.distributed.sharding import ShardingRules, prune_for_mesh
 from repro.launch.steps import (
     jit_commit_prefill,
-    jit_paged_decode_step,
-    jit_paged_prefill_step,
+    jit_unified_step,
+    paged_pool_sharding,
 )
 from repro.serve.kvcache import NULL_BLOCK, KVCacheConfig, PagedKVCache
 from repro.serve.metrics import ServeMetrics
@@ -75,11 +90,29 @@ class RuntimeConfig:
     num_blocks: Optional[int] = None  # pool size; default: slots*table + null
     max_new_tokens: int = 32          # default generation budget
     eos_id: int = -1                  # -1: never stop early
+    # prompt tokens the unified step may carry per engine step (the prefill
+    # lane's width).  None = max_seq: any admissible prompt prefills in one
+    # chunk (the "unchunked" configuration — identical token streams, just
+    # no slicing).  Smaller budgets slice long prompts across steps so the
+    # decode batch keeps streaming.  NOTE the lane's width is baked into
+    # the one compiled program, so even chunk-less decode steps execute a
+    # chunk_tokens-wide dummy forward — the budget prices EVERY step, and
+    # None makes that idle lane max_seq wide.  Keep it modest (a few x the
+    # slot count); see README "chunk-budget tuning".
+    chunk_tokens: Optional[int] = 32
     interpret: bool = True            # False: compile Pallas lanes on real TPU
 
     @property
     def max_seq(self) -> int:
         return self.block_size * self.max_blocks_per_seq
+
+    @property
+    def chunk_width(self) -> int:
+        """The prefill lane's RESOLVED width: chunk_tokens clamped to
+        [1, max_seq], with None meaning max_seq.  Pass THIS to
+        `build_serve_plan(chunk_tokens=...)` so the plan's prefill_chunk
+        stage is tuned at the width the engine actually runs."""
+        return max(1, min(self.chunk_tokens or self.max_seq, self.max_seq))
 
     def kv_config(self) -> KVCacheConfig:
         nb = self.num_blocks
@@ -115,27 +148,39 @@ class ContinuousEngine:
         self.metrics = ServeMetrics()
         self._rid = 0
         self._done: List[ServeRequest] = []
-        # per-slot host state
+        # fixed prefill-lane width: the step's prompt-token budget
+        self._chunk_width = cfg.chunk_width
+        # per-slot host state (decode lane; prefilling slots stay zeroed so
+        # their dummy decode row writes to the null sink)
         self._lengths = np.zeros((cfg.max_slots,), np.int32)
         self._last_tok = np.zeros((cfg.max_slots,), np.int32)
-        # compiled programs — attention backends AND the per-stage matmul
-        # lane tables come from the plan's respective stage choices.  (The
-        # paged decode kernel's block geometry is fixed by the pool, so its
-        # stage choice contributes only the backend; the prefill flash
-        # kernel also takes the tuned block_q/block_kv config.  The matmul
-        # tables route qkv_proj/mlp_up/mlp_down/lm_head through the chosen
-        # XLA-vs-Pallas lane; closed over at trace time, so dispatch never
-        # recompiles mid-serve.)
+        # THE compiled program: one unified step carrying the decode batch
+        # plus one prompt chunk.  Attention backends and per-stage matmul
+        # lane tables come from the plan's stage choices (decode + the new
+        # prefill_chunk stage), closed over at trace time — dispatch never
+        # recompiles mid-serve, and admission compiles nothing at all.
         decode_backend, _ = self.router.attention_backend("decode")
-        self._matmul_tables = {s: self.router.matmul_table(s)
-                               for s in ("prefill", "decode")}
-        self._decode = jit_paged_decode_step(
-            model, mesh, rules, attn_backend=decode_backend,
-            matmul_table=self._matmul_tables["decode"],
+        chunk_backend, chunk_config = self.router.attention_backend(
+            "prefill_chunk")
+        self._unified = jit_unified_step(
+            model, mesh, rules,
+            decode_attn_backend=decode_backend,
+            chunk_attn_backend=chunk_backend,
+            chunk_attn_config=chunk_config,
+            decode_matmul_table=self.router.matmul_table("decode"),
+            chunk_matmul_table=self.router.matmul_table("prefill_chunk"),
             interpret=cfg.interpret)
-        self._prefill_choice = self.router.attention_backend("prefill")
-        self._prefills: Dict[int, Any] = {}   # bucket len -> jitted prefill
+        # resume-only commit (swap-in scatter); single full-width shape
         self._commit = jit_commit_prefill(model, mesh, rules)
+        # commit the fresh pools to their serving sharding up front: the
+        # unified program's donated pool arguments then carry the SAME
+        # sharding on the very first step as on every later one, so exactly
+        # one executable ever builds (an uncommitted first call would
+        # compile a second, layout-shifted copy of the program)
+        pool_shard = paged_pool_sharding(model, mesh,
+                                         prune_for_mesh(rules, mesh))
+        self.cache.k = jax.device_put(self.cache.k, pool_shard)
+        self.cache.v = jax.device_put(self.cache.v, pool_shard)
 
     # ------------------------------------------------------------ interface
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
@@ -155,7 +200,7 @@ class ContinuousEngine:
         """Step until every submitted request completes; returns them in
         completion order.  Idle steps (all slots empty, next arrival still
         in the future) back off briefly instead of spinning."""
-        if self.metrics.start_time == 0.0:
+        if self.metrics.start_time is None:
             self.metrics.start_time = self.now_fn()
         with self.mesh:
             while self.scheduler.has_work:
@@ -169,30 +214,6 @@ class ContinuousEngine:
         """Fresh metrics (e.g. after a warm-up pass); compiled programs and
         cache state are kept."""
         self.metrics = ServeMetrics()
-
-    # ----------------------------------------------------------- internals
-    def _bucket(self, prompt_len: int) -> int:
-        """Power-of-two block-count bucket (>= 1 block) covering the prompt:
-        at most log2(max_blocks_per_seq)+1 prefill programs ever compile."""
-        bs = self.kv_cfg.block_size
-        nb = max(1, -(-prompt_len // bs))
-        p = 1
-        while p < nb:
-            p *= 2
-        return min(p, self.kv_cfg.max_blocks_per_seq) * bs
-
-    def _prefill_fn(self, bucket: int):
-        fn = self._prefills.get(bucket)
-        if fn is None:
-            specs = {"tokens": jax.ShapeDtypeStruct((1, bucket), jnp.int32)}
-            backend, config = self._prefill_choice
-            fn = jit_paged_prefill_step(self.model, self.mesh, self.rules,
-                                        specs, attn_backend=backend,
-                                        attn_config=config,
-                                        matmul_table=self._matmul_tables["prefill"],
-                                        interpret=self.cfg.interpret)
-            self._prefills[bucket] = fn
-        return fn
 
     # ------------------------------------------------- preemption / resume
     def _ensure_blocks(self, req: ServeRequest) -> None:
@@ -212,7 +233,8 @@ class ContinuousEngine:
 
     def _preempt(self, victim: ServeRequest) -> None:
         """Swap the victim's KV out to host, free its blocks + slot, queue
-        it for resume."""
+        it for resume.  Works mid-prefill too: the committed chunks travel
+        with the swap and `prefilled` marks where the prompt resumes."""
         slot = victim.slot
         nbytes = self.cache.swap_out(victim.rid)
         self.scheduler.preempt(victim, self.now_fn())
@@ -221,18 +243,19 @@ class ContinuousEngine:
 
     def _resume(self, req: ServeRequest) -> None:
         """Swap a re-admitted request's KV back in: scatter the host buffer
-        into the freshly allocated blocks via the SAME jitted commit program
-        the bucketed prefill uses (host blocks padded to the power-of-two
-        bucket, padding ids pointing at the null sink), then restore the
-        slot's host state.  No forward pass — no token is recomputed."""
+        into the freshly allocated blocks via the jitted commit program,
+        always padded to the FULL table width (padding ids point at the
+        null sink) so exactly one commit shape ever traces, then restore
+        the slot's host state.  No forward pass — no token is recomputed; a
+        mid-prefill request continues chunking from `prefilled`."""
         t0 = time.perf_counter()
         k_host, v_host = self.cache.take_swapped(req.rid)
-        nbytes = k_host.nbytes + v_host.nbytes   # before bucket padding
+        nbytes = k_host.nbytes + v_host.nbytes   # before table padding
         table = self.cache.alloc.tables[req.rid]
         nb = k_host.shape[1]
         assert nb == len(table)
         bs = self.kv_cfg.block_size
-        nb_pad = self._bucket(nb * bs) // bs
+        nb_pad = self.kv_cfg.max_blocks_per_seq
         ids = np.full((nb_pad,), NULL_BLOCK, np.int32)
         ids[:nb] = table
         if nb_pad > nb:
@@ -245,44 +268,16 @@ class ContinuousEngine:
         vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
         self.cache.k, self.cache.v = self._commit(
             self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
-        self.metrics.prefill_time_s += time.perf_counter() - t0
-        self.metrics.record_resume(nbytes, req.last_stall_s)
+        self.metrics.record_resume(nbytes, req.last_stall_s,
+                                   swap_in_s=time.perf_counter() - t0)
         slot = req.slot
-        self._lengths[slot] = req.prompt_len + len(req.output) - 1
-        self._last_tok[slot] = req.output[-1]
-
-    def _prefill(self, req: ServeRequest, now: float) -> None:
-        plen = req.prompt_len
-        bucket = self._bucket(plen)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt                       # right-pad
-        lengths = jnp.asarray([plen], jnp.int32)
-        t0 = time.perf_counter()
-        logits, ks, vs = self._prefill_fn(bucket)(
-            self.params, {"tokens": jnp.asarray(toks)}, lengths)
-
-        # commit the prompt KV into this request's blocks
-        table = self.cache.alloc.tables[req.rid]
-        nb = bucket // self.kv_cfg.block_size
-        ids = np.full((nb,), NULL_BLOCK, np.int32)
-        n_real = min(nb, len(table))
-        ids[:n_real] = table[:n_real]
-        self.cache.k, self.cache.v = self._commit(
-            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
-        self.metrics.prefill_time_s += time.perf_counter() - t0
-
-        first = int(jnp.argmax(logits[0, -1], -1))
-        req.output.append(first)
-        req.first_token_time = self.now_fn()
-        self.metrics.record_first_token(req.first_token_time - req.arrival_time)
-        self.metrics.prefills += 1
-        slot = req.slot
-        self._lengths[slot] = plen
-        self._last_tok[slot] = first
-        if self._finished(req):
-            self.scheduler.retire(req, self.now_fn())
+        if req.prefilling:
+            # not in the decode batch yet: stay masked (zeroed) until the
+            # remaining chunks commit the rest of the prompt
             self._reset_slot(slot)
-            self._complete(req)
+        else:
+            self._lengths[slot] = req.prompt_len + len(req.output) - 1
+            self._last_tok[slot] = req.output[-1]
 
     def _reset_slot(self, slot: int) -> None:
         # stale lengths on a freed slot would index past the (all-null)
@@ -300,48 +295,109 @@ class ContinuousEngine:
         self.metrics.record_completion(req.latency_s, len(req.output))
         self._done.append(req)
 
+    # ----------------------------------------------------------- unified step
+    def _chunk_inputs(self, chunk: Optional[Tuple[ServeRequest, int, int]]):
+        """Host-side prefill-lane arrays: the chunk's prompt slice (fixed
+        `_chunk_width`, zero-padded) and its block table; an idle lane is
+        all padding with an all-null table (rows divert to the sink)."""
+        c = self._chunk_width
+        toks = np.zeros((1, c), np.int32)
+        table = np.full((1, self.kv_cfg.max_blocks_per_seq),
+                        NULL_BLOCK, np.int32)
+        start = 0
+        n = 0
+        if chunk is not None:
+            req, start, n = chunk
+            toks[0, :n] = req.prompt[start:start + n]
+            held = self.cache.alloc.tables[req.rid]
+            table[0, :len(held)] = held
+        return toks, table, start, n
+
     def step(self) -> bool:
-        """One engine step: admit (resumes swap back in, new arrivals
-        prefill), grow every active request's block table to cover its next
-        token (preempting victims if the pool is dry), then one decode step
-        over every surviving slot.  Returns False when nothing ran."""
+        """One engine step = one unified-program invocation: admit (resumes
+        swap back in; fresh arrivals just take a slot), pick the step's
+        prefill chunk (token-budget accounting), grow every *decoding*
+        request's block table to cover its next token (preempting victims
+        if the pool is dry), then run the chunk lane + the decode lane as
+        ONE program.  Returns False when nothing ran."""
         now = self.now_fn()
         admitted = self.scheduler.admit(now)
         for req in admitted:
             if self.cache.is_swapped(req.rid):
                 self._resume(req)
-            else:
-                self._prefill(req, now)
+            # fresh admissions run nothing here: their prompts stream
+            # through the unified step's chunk lane, starting this step
 
-        # on-demand growth: every active request secures the block its next
-        # decode write lands in.  A request preempted as some later grower's
-        # victim drops out of this step's batch (slot is None by then).
-        for req in [r for r in self.scheduler.slots if r is not None]:
+        chunk = self.scheduler.next_chunk(self._chunk_width)
+
+        # on-demand growth for the decode batch: every decoding request
+        # secures the block its next write lands in.  A request preempted
+        # as some later grower's victim drops out of this step (slot is
+        # None by then) — including, possibly, the chunk's request.
+        for req in [r for r in self.scheduler.slots
+                    if r is not None and not r.prefilling]:
             if req.slot is not None:
                 self._ensure_blocks(req)
+        if chunk is not None and chunk[0].slot is None:
+            chunk = None                      # chunk request was evicted
 
-        active = [r for r in self.scheduler.slots if r is not None]
-        if not active:
+        decoding = [r for r in self.scheduler.slots
+                    if r is not None and not r.prefilling]
+        if not decoding and chunk is None:
             return bool(admitted)
-        bt = jnp.asarray(self.cache.table_array(self.scheduler.slot_rids()))
+
+        # decode lane inputs: prefilling slots are masked exactly like empty
+        # ones (null table, zero length) — their dummy row writes to the sink
+        dec_rids = [r.rid if (r is not None and not r.prefilling) else None
+                    for r in self.scheduler.slots]
+        bt = jnp.asarray(self.cache.table_array(dec_rids))
         lengths = jnp.asarray(self._lengths)
         tokens = jnp.asarray(self._last_tok[:, None])
+        ch_toks, ch_table, ch_start, ch_len = self._chunk_inputs(chunk)
+
         t0 = time.perf_counter()
-        nxt_dev, self.cache.k, self.cache.v = self._decode(
-            self.params, self.cache.k, self.cache.v, bt, lengths, tokens)
+        nxt_dev, ch_next_dev, self.cache.k, self.cache.v = self._unified(
+            self.params, self.cache.k, self.cache.v, bt, lengths, tokens,
+            jnp.asarray(ch_toks), jnp.asarray(ch_table),
+            jnp.asarray(ch_start, jnp.int32), jnp.asarray(ch_len, jnp.int32))
         nxt = np.asarray(nxt_dev, np.int32)
-        self.metrics.decode_time_s += time.perf_counter() - t0
+        step_s = time.perf_counter() - t0
+        # one program serves both lanes; attribute chunk-only steps to
+        # prefill time, everything else to decode time
+        if decoding:
+            self.metrics.decode_time_s += step_s
+        else:
+            self.metrics.prefill_time_s += step_s
 
         now = self.now_fn()
-        self.metrics.record_step(len(active), self.cfg.max_slots,
-                                 self.cache.alloc.occupancy())
-        for req in active:
-            slot = req.slot
-            req.output.append(int(nxt[slot]))
-            self._lengths[slot] += 1
-            self._last_tok[slot] = nxt[slot]
-            if self._finished(req):
-                self.scheduler.retire(req, now)
-                self._reset_slot(slot)
-                self._complete(req)
+        if chunk is not None:
+            req, start, n = chunk
+            req.prefilled = start + n
+            self.metrics.record_chunk(n)
+            if not req.prefilling:            # this chunk finished the prompt
+                first = int(ch_next_dev)
+                req.output.append(first)
+                req.first_token_time = now
+                self.metrics.record_first_token(now - req.arrival_time)
+                self.metrics.prefills += 1
+                slot = req.slot
+                self._lengths[slot] = req.prompt_len
+                self._last_tok[slot] = first
+                if self._finished(req):
+                    self.scheduler.retire(req, now)
+                    self._reset_slot(slot)
+                    self._complete(req)
+
+        if decoding:
+            self.metrics.record_step(len(decoding), self.cfg.max_slots,
+                                     self.cache.alloc.occupancy())
+            for req in decoding:
+                slot = req.slot
+                req.output.append(int(nxt[slot]))
+                self._lengths[slot] += 1
+                self._last_tok[slot] = nxt[slot]
+                if self._finished(req):
+                    self.scheduler.retire(req, now)
+                    self._reset_slot(slot)
+                    self._complete(req)
         return True

@@ -10,8 +10,14 @@ row of that batch.  Each engine step the scheduler:
      *prompt* (not prompt+budget): KV grows on demand during decode
      (`BlockAllocator.extend`, one block at a time), so admission reserves
      only what prefill will actually write,
-  3. hands the engine the set of newly admitted requests to prefill (new
-     arrivals) or swap back in (resumes).
+  3. picks the step's prefill *chunk* (`next_chunk`): alongside the slot
+     accounting sits chunk accounting — each admitted request remembers how
+     much of its prompt is committed (`ServeRequest.prefilled`) and the
+     oldest admission with pending prompt work receives up to the engine's
+     `chunk_tokens` budget this step.  Admission itself is therefore free
+     (no prefill program runs at admission; the prompt is streamed through
+     the unified step), and a request only joins the decode batch once its
+     prompt is fully committed.
 
 When the pool runs dry mid-decode — a growing request cannot extend — the
 scheduler picks a preemption *victim*: the most recently admitted active
@@ -54,6 +60,10 @@ class ServeRequest:
     # generation state
     output: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # chunked-prefill state: prompt tokens whose KV is committed to the pool.
+    # A request joins the decode batch only once prefilled == prompt_len; the
+    # unified step advances it by up to `chunk_tokens` per engine step.
+    prefilled: int = 0
     # preemption state
     preemptions: int = 0
     preempted_time: Optional[float] = None  # set while off-slot awaiting resume
@@ -63,6 +73,12 @@ class ServeRequest:
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def prefilling(self) -> bool:
+        """True while some prompt KV is still uncommitted — the request
+        holds a slot but is not yet part of the decode batch."""
+        return self.prefilled < self.prompt_len
 
     @property
     def done(self) -> bool:
@@ -194,6 +210,27 @@ class ContinuousScheduler:
             admitted.append(req)
         return admitted
 
+    def next_chunk(self, budget: int) -> Optional[tuple]:
+        """Pick this step's prefill chunk: the oldest-admitted request with
+        uncommitted prompt tokens gets min(budget, remaining) of them.
+
+        Returns (request, start, n_tokens) or None when no prompt work is
+        pending.  Head-of-line by admission time (ties: lowest rid): a
+        prompt is streamed to completion before a later admission's prompt
+        starts, so TTFT ordering follows admission ordering.  The budget is
+        the unified step's `chunk_tokens` — the token-budget counterpart of
+        slot accounting: slots bound *who* is resident, the chunk budget
+        bounds how much *prompt* work any single step may carry, which is
+        what keeps a long prompt from stalling the decode batch."""
+        if budget < 1:
+            return None
+        cands = [r for r in self.slots if r is not None and r.prefilling]
+        if not cands:
+            return None
+        req = min(cands, key=lambda r: (r.admitted_time, r.rid))
+        n = min(budget, req.prompt_len - req.prefilled)
+        return req, req.prefilled, n
+
     def victim_for_preemption(
             self, exclude_rid: int) -> Optional[ServeRequest]:
         """Deterministic victim choice when the pool runs dry: the most
@@ -211,7 +248,11 @@ class ContinuousScheduler:
     def preempt(self, req: ServeRequest, now: float) -> None:
         """Take `req` off its slot and queue it for resume.  The engine
         swaps the KV blocks out (see `PagedKVCache.swap_out`) BEFORE calling
-        this; here is only the slot/queue bookkeeping."""
+        this; here is only the slot/queue bookkeeping.  Partially prefilled
+        requests preempt exactly like decoding ones — `prefilled` rides on
+        the request, so after the swap-in restores the committed KV the
+        chunk accounting resumes the prompt mid-stream, recomputing
+        nothing."""
         assert req.slot is not None and self.slots[req.slot] is req
         self.slots[req.slot] = None
         req.slot = None

@@ -1,0 +1,318 @@
+"""Unified token-budget step: chunked prefill shares the step with the
+decode batch through the block-table-aware prefill kernel.
+
+The load-bearing contracts pinned here:
+
+  * the chunked-prefill Pallas kernel agrees with a from-scratch gather
+    reference at arbitrary chunk offsets, GQA groupings and block_q tiles;
+  * chunking is invisible to the tokens: a `chunk_tokens`-limited engine
+    emits byte-identical greedy streams to an unlimited one (whole prompt
+    in one chunk), fast small case + slow multi-seed Poisson fuzz on the
+    PR 3 differential harness;
+  * the unified step compiles exactly ONCE — admission (including chunked
+    admission of prompts far longer than any compiled-in shape) triggers
+    zero new programs;
+  * preemption mid-prefill swaps the committed chunks out and resumes the
+    prompt where it stopped, still token-identical;
+  * satellite regressions: `swap_in_time_s` is its own metric (resume no
+    longer inflates `prefill_time_s`), and `run()` no longer re-arms
+    `start_time` on virtual-clock replays starting at t=0.0.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import InferencePlan, OpChoice
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve.router import PlanRouter
+from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+
+
+# ------------------------------------------------------------------ kernel
+def _chunk_reference(q, k_pool, v_pool, table, chunk_start):
+    """Gather + per-row causally-masked softmax, GQA-grouped."""
+    c, h, d = q.shape
+    bs = k_pool.shape[1]
+    hkv = k_pool.shape[2]
+    nbt = len(table)
+    k_ctx = np.asarray(k_pool)[np.asarray(table)].reshape(nbt * bs, hkv, d)
+    v_ctx = np.asarray(v_pool)[np.asarray(table)].reshape(nbt * bs, hkv, d)
+    qn = np.asarray(q).reshape(c, hkv, h // hkv, d)
+    s = np.einsum("qhgd,khd->hgqk", qn, k_ctx) / np.sqrt(d)
+    qpos = chunk_start + np.arange(c)[None, None, :, None]
+    kpos = np.arange(nbt * bs)[None, None, None, :]
+    s = np.where(kpos <= qpos, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("hgqk,khd->qhgd", p, v_ctx)
+    return out.reshape(c, h, d)
+
+
+@pytest.mark.parametrize("chunk_start,block_q", [(0, None), (13, None),
+                                                 (13, 4), (24, 8)])
+def test_prefill_paged_kernel_matches_gather_reference(chunk_start, block_q):
+    """`flash_prefill_paged` (via the ops wrapper) must agree with the XLA
+    gather reference at arbitrary chunk offsets and query tilings — the
+    generalisation of `flash_decode_paged` from 1 query row to a chunk."""
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(7)
+    c, h, hkv, d, bs, nbt, nb = 11, 4, 2, 16, 8, 6, 16
+    q = jnp.asarray(rng.standard_normal((1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, bs, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, bs, hkv, d)), jnp.float32)
+    table = rng.permutation(np.arange(1, nb))[:nbt]
+    tables = jnp.asarray(table[None], jnp.int32)
+
+    cfg = {"block_q": block_q} if block_q else None
+    out = K.attention_prefill_paged(q, kp, vp, tables,
+                                    jnp.asarray(chunk_start, jnp.int32),
+                                    jnp.asarray(c, jnp.int32), config=cfg)
+    ref = _chunk_reference(q[0], kp, vp, table, chunk_start)
+    np.testing.assert_allclose(np.asarray(out[0]), ref, rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- engine e2e
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                           vocab=97)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, chunk_tokens, num_blocks=None, max_slots=3,
+            now_fn=None, router=None, max_new=16):
+    return ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=max_slots, block_size=8, max_blocks_per_seq=6,
+                      num_blocks=num_blocks, max_new_tokens=max_new,
+                      chunk_tokens=chunk_tokens),
+        router=router, now_fn=now_fn)
+
+
+def test_chunked_vs_unchunked_identity_and_no_admission_compiles(tiny_lm):
+    """Fast differential: a chunk_tokens=5 engine and an unlimited engine
+    (whole prompt in one chunk) must emit byte-identical greedy streams,
+    and neither may compile ANYTHING after the first step — admission of
+    new prompts, of any length, is a pure data update."""
+    cfg, model, params = tiny_lm
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24)))
+               .astype(np.int32) for _ in range(6)]
+    budgets = [int(rng.integers(2, 12)) for _ in prompts]
+
+    outs, engines = {}, {}
+    for label, ct in (("chunked", 5), ("unlimited", None)):
+        eng = _engine(model, params, chunk_tokens=ct)
+        with eng.mesh:
+            eng.submit(prompts[0], max_new_tokens=budgets[0])
+            eng.step()                          # warm: THE unified program
+            n_compiles = eng._unified._cache_size()
+            for p, b in zip(prompts[1:], budgets[1:]):
+                eng.submit(p, max_new_tokens=b)  # admissions mid-flight
+            while eng.scheduler.has_work:
+                eng.step()
+        assert eng._unified._cache_size() == n_compiles == 1, label
+        outs[label] = {r.rid: r.output for r in eng._done}
+        engines[label] = eng
+        eng.cache.alloc.check_invariants()
+        assert eng.cache.alloc.num_used == 0
+
+    assert outs["chunked"] == outs["unlimited"]
+    # the chunked engine really split prompts: more chunks than prompts,
+    # same committed token total
+    m = engines["chunked"].metrics
+    assert m.prefill_chunks > len(prompts)
+    assert m.chunk_tokens_committed == sum(len(p) for p in prompts)
+    assert engines["unlimited"].metrics.prefill_chunks == len(prompts)
+
+
+def test_chunk_accounting_and_ttft_spans_all_chunks(tiny_lm):
+    """A 17-token prompt under a 4-token budget takes ceil(17/4)=5 chunk
+    steps; the first token (and TTFT) appears exactly when the LAST chunk
+    commits, and decode joins the following step."""
+    cfg, model, params = tiny_lm
+    clock = {"t": 0.0}
+
+    def now():
+        return clock["t"]
+
+    eng = _engine(model, params, chunk_tokens=4, now_fn=now)
+    prompt = np.arange(17, dtype=np.int32) % cfg.vocab
+    eng.submit(prompt, max_new_tokens=4, arrival_time=0.0)
+    with eng.mesh:
+        for i in range(1, 6):
+            clock["t"] = float(i)
+            eng.step()
+            req = next(r for r in eng.scheduler.slots if r is not None)
+            assert req.prefilled == min(4 * i, 17)
+            assert len(req.output) == (1 if req.prefilled == 17 else 0)
+        assert eng.metrics.prefill_chunks == 5
+        assert eng.metrics.chunk_tokens_committed == 17
+        assert req.ttft_s == pytest.approx(5.0)   # spans all five chunks
+        clock["t"] = 6.0
+        eng.step()
+        assert len(req.output) == 2               # joined the decode batch
+
+
+def test_mid_prefill_preemption_resumes_token_identical(tiny_lm):
+    """A request preempted with only part of its prompt committed must swap
+    its chunks out, resume, finish the prompt from where it stopped, and
+    still match the unconstrained engine byte-for-byte."""
+    cfg, model, params = tiny_lm
+    rng = np.random.default_rng(5)
+    # two quick decoders grow while a 30-token prompt trickles in at 3
+    # tokens/step — with this pool their growth preempts the long request
+    # at prefilled=15 of 30, i.e. with half its chunks already committed
+    prompts = [rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+               for _ in range(2)]
+    prompts.append(rng.integers(0, cfg.vocab, size=30).astype(np.int32))
+
+    def drive(num_blocks):
+        eng = _engine(model, params, chunk_tokens=3, num_blocks=num_blocks,
+                      max_new=14)
+        for p in prompts:
+            eng.submit(p, arrival_time=0.0)
+        return eng, eng.run()
+
+    small, done_s = drive(num_blocks=8)
+    big, done_b = drive(num_blocks=None)
+    assert small.metrics.preemptions >= 1
+    long_req = next(r for r in done_s if r.rid == 3)
+    assert long_req.preemptions >= 1 and long_req.stall_s > 0
+    assert ({r.rid: r.output for r in done_s}
+            == {r.rid: r.output for r in done_b})
+    assert len(long_req.output) == 14
+    assert small._unified._cache_size() == 1
+    small.cache.alloc.check_invariants()
+    assert small.cache.alloc.num_used == 0
+
+
+@pytest.mark.slow
+def test_differential_fuzz_chunked_poisson_traces(tiny_lm):
+    """Slow differential fuzz on the PR 3 Poisson harness: random arrival
+    traces replayed through a chunk_tokens-limited engine and an unlimited
+    one under the same virtual clock — every per-request greedy stream
+    must match across seeds, with zero admission compiles, including runs
+    where a shrunken pool layers preemption on top of chunking."""
+    cfg, model, params = tiny_lm
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        n = 10
+        arrivals = np.cumsum(rng.exponential(0.3, size=n))
+        prompts = [rng.integers(0, cfg.vocab,
+                                size=int(rng.integers(4, 30))).astype(np.int32)
+                   for _ in range(n)]
+        budgets = [int(rng.integers(2, 16)) for _ in range(n)]
+
+        def replay(chunk_tokens, num_blocks=None):
+            clock = {"t": 0.0}
+            eng = _engine(model, params, chunk_tokens=chunk_tokens,
+                          num_blocks=num_blocks,
+                          now_fn=lambda: clock["t"])
+            for a, p, b in zip(arrivals, prompts, budgets):
+                eng.submit(p, max_new_tokens=b, arrival_time=float(a))
+            with eng.mesh:
+                while eng.scheduler.has_work:
+                    ran = eng.step()
+                    clock["t"] += 0.2 if ran else 0.05
+            assert eng._unified._cache_size() == 1
+            eng.cache.alloc.check_invariants()
+            assert eng.cache.alloc.num_used == 0
+            return eng, {r.rid: r.output for r in eng._done}
+
+        _, out_unl = replay(chunk_tokens=None)
+        chunked, out_ch = replay(chunk_tokens=4)
+        assert out_ch == out_unl, f"chunked stream diverged (seed {seed})"
+        assert chunked.metrics.prefill_chunks > n
+        small, out_small = replay(chunk_tokens=4, num_blocks=8)
+        assert out_small == out_unl, \
+            f"chunked+preempted stream diverged (seed {seed})"
+        assert small.metrics.preemptions >= 1, f"no preemption (seed {seed})"
+
+
+# ---------------------------------------------------------- router fallback
+def test_prefill_chunk_stage_falls_back_to_prefill_choice():
+    """Plans tuned before the prefill_chunk stage existed route the chunk
+    lane through the prefill stage's choice instead of dropping to
+    untuned XLA."""
+    plan = InferencePlan("serve", "tpu_v5e")
+    plan.choices["prefill.attention"] = OpChoice(
+        "pallas_attention", {"block_q": 16, "block_kv": 32}, 1e-4)
+    plan.choices["prefill.qkv_proj"] = OpChoice(
+        "pallas_matmul", {"bm": 8, "bn": 128, "bk": 128}, 1e-4)
+    router = PlanRouter(plan)
+    backend, config = router.attention_backend("prefill_chunk")
+    assert backend == "pallas_attention"
+    assert config["block_q"] == 16
+    assert router.matmul_config("prefill_chunk", "qkv_proj")[0] == "pallas_matmul"
+    # an explicit prefill_chunk choice wins over the fallback
+    plan.choices["prefill_chunk.attention"] = OpChoice("xla", {}, 1e-4)
+    assert router.attention_backend("prefill_chunk") == ("xla", {})
+
+
+# ------------------------------------------------------ satellite: metrics
+def test_swap_in_time_not_booked_as_prefill_time(tiny_lm):
+    """Regression: `_resume`'s swap-in scatter used to land in
+    `prefill_time_s`.  It must now accrue in `swap_in_time_s` only."""
+    cfg, model, params = tiny_lm
+    eng = _engine(model, params, chunk_tokens=None, max_slots=2, max_new=8)
+    rng = np.random.default_rng(1)
+    eng.submit(rng.integers(0, cfg.vocab, size=9).astype(np.int32))
+    with eng.mesh:
+        eng.step()                                   # prefill completes
+        req = next(r for r in eng.scheduler.slots if r is not None)
+        prefill_s = eng.metrics.prefill_time_s
+        assert prefill_s > 0
+        assert eng.metrics.swap_in_time_s == 0.0
+        eng._preempt(req)                            # force a swap-out
+        while eng.scheduler.has_work:                # resume + finish
+            eng.step()
+    assert eng.metrics.swap_in_time_s > 0
+    assert eng.metrics.prefill_time_s == prefill_s   # untouched by resume
+    assert len(eng._done) == 1 and len(eng._done[0].output) == 8
+    s = eng.metrics.summary()
+    assert s["swap_in_time_s"] == eng.metrics.swap_in_time_s
+
+
+def test_run_keeps_explicit_zero_start_time(tiny_lm):
+    """Regression: run() used to re-arm on `start_time == 0.0`, clobbering
+    virtual-clock replays that legitimately start at t=0.0.  The unset
+    sentinel is None now."""
+    cfg, model, params = tiny_lm
+    clock = {"t": 3.0}   # the virtual clock is PAST zero when run() starts
+    eng = _engine(model, params, chunk_tokens=None,
+                  now_fn=lambda: clock["t"])
+    rng = np.random.default_rng(2)
+    eng.submit(rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+               max_new_tokens=3, arrival_time=0.0)
+    eng.metrics.start_time = 0.0       # replay measured from t=0.0
+    orig_step = eng.step
+
+    def step_and_tick():
+        ran = orig_step()
+        clock["t"] += 0.5
+        return ran
+
+    eng.step = step_and_tick
+    eng.run()
+    assert eng.metrics.start_time == 0.0          # NOT re-armed to now()
+    assert eng.metrics.end_time == clock["t"]
+    assert eng.metrics.wall_s == pytest.approx(clock["t"])
+    # and the None sentinel still arms lazily when nothing was set
+    eng2 = _engine(model, params, chunk_tokens=None,
+                   now_fn=lambda: clock["t"])
+    eng2.submit(rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+                max_new_tokens=2, arrival_time=0.0)
+    assert eng2.metrics.start_time is None
+    eng2.run()
+    assert eng2.metrics.start_time is not None
+    assert not math.isnan(eng2.metrics.summary()["tokens_per_s"])

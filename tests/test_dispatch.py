@@ -25,7 +25,7 @@ MM_CFG = {"bm": 8, "bn": 128, "bk": 128, "order": "mn", "k_unroll": 1}
 def _forced_pallas_plan() -> InferencePlan:
     """A serve plan whose every stage matmul picks the tuned Pallas lane."""
     plan = InferencePlan("serve", "tpu_v5e")
-    for stage in ("prefill", "decode"):
+    for stage in ("prefill", "decode", "prefill_chunk"):
         for op in dispatch.MATMUL_ROLES:
             plan.choices[f"{stage}.{op}"] = OpChoice(
                 "pallas_matmul", dict(MM_CFG), 1e-4)
@@ -132,21 +132,21 @@ def _drive(model, params, router, prompts):
         eng.submit(prompts[0])
         eng.step()
         eng.step()
-        n_compiles = eng._decode._cache_size()
+        n_compiles = eng._unified._cache_size()
         eng.submit(prompts[1])              # mid-flight admission
         while eng.scheduler.has_work:
             eng.step()
     # plan-dispatched matmuls active or not, admission compiles nothing new
-    assert eng._decode._cache_size() == n_compiles == 1
+    assert eng._unified._cache_size() == n_compiles == 1
     eng.cache.alloc.check_invariants()
     return {r.rid: r.output for r in eng._done}
 
 
 def test_engine_routes_plan_matmuls_both_stages_no_recompile(tiny_f32_lm):
     """With a serve plan whose stage matmul choices all pick pallas_matmul,
-    the engine's prefill AND decode programs run the tuned lane — greedy
-    outputs must match the XLA-lane engine exactly (f32) and the decode
-    program must still never recompile across admissions."""
+    the unified step's chunk lane AND decode lane run the tuned matmuls —
+    greedy outputs must match the XLA-lane engine exactly (f32) and the
+    unified program must still never recompile across admissions."""
     cfg, model, params = tiny_f32_lm
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
@@ -163,7 +163,7 @@ def test_engine_routes_plan_matmuls_both_stages_no_recompile(tiny_f32_lm):
 
 def test_router_matmul_table_covers_all_roles():
     router = PlanRouter(_forced_pallas_plan())
-    for stage in ("prefill", "decode"):
+    for stage in ("prefill", "decode", "prefill_chunk"):
         table = router.matmul_table(stage)
         assert set(table) == set(dispatch.MATMUL_ROLES)
     # planless router: every role on the XLA lane

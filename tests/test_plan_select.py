@@ -74,7 +74,7 @@ def test_serve_graph_has_stage_qualified_nodes():
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
     g = build_serve_graph(cfg, prefill_len=32, slots=4, max_seq=64)
     names = {n.name for n in g.nodes}
-    for stage in ("prefill", "decode"):
+    for stage in ("prefill", "decode", "prefill_chunk"):
         for op in ("qkv_proj", "attention", "mlp_up", "mlp_down", "lm_head"):
             assert f"{stage}.{op}" in names
 
@@ -111,7 +111,7 @@ def test_router_stage_lookup_and_fallback():
     plan = build_serve_plan(cfg, prefill_len=32, slots=4, max_seq=64,
                             tuner=_fast_tuner())
     router = PlanRouter(plan)
-    for stage in ("prefill", "decode"):
+    for stage in ("prefill", "decode", "prefill_chunk"):
         backend, config = router.attention_backend(stage)
         assert backend in ("xla", "pallas_attention")
         assert isinstance(config, dict)
@@ -122,8 +122,8 @@ def test_router_stage_lookup_and_fallback():
         for b, c in table.values():
             assert b in ("xla", "pallas_matmul")
             assert isinstance(c, dict)
-    # every serve op resolved per-stage (5 ops x 2 stages)
-    assert len(router.describe()) == 10
+    # every serve op resolved per-stage (5 ops x 3 stages)
+    assert len(router.describe()) == 15
 
     # no plan -> always the XLA lane, never an error
     bare = PlanRouter(None)

@@ -165,15 +165,11 @@ def test_preemption_differential_identity(tiny_lm):
     assert big.metrics.preemptions == 0
     assert ({r.rid: r.output for r in done_s}
             == {r.rid: r.output for r in done_b})
-    assert small._decode._cache_size() == 1     # preempt/resume: no recompile
-    # commit compiles stay bounded by the pow2 bucket ladder resume shares
-    # with prefill — never one-per-resume-shape.  Prefill commits
-    # activation-dtype K/V and resume commits pool-dtype host buffers, so
-    # each rung can trace at most twice (once per dtype class).
-    bs = small.kv_cfg.block_size
-    ladder = {small._bucket(n * bs)
-              for n in range(1, small.kv_cfg.max_blocks_per_seq + 1)}
-    assert small._commit._cache_size() <= 2 * len(ladder)
+    assert small._unified._cache_size() == 1    # preempt/resume: no recompile
+    # prefill KV commits in-program now; the separate commit program is the
+    # resume path only and always pads to the full table width — exactly
+    # one shape ever traces, no bucket ladder anywhere.
+    assert small._commit._cache_size() == 1
     assert small.metrics.swap_out_bytes > 0
     assert small.metrics.swap_in_bytes == small.metrics.swap_out_bytes
     small.cache.alloc.check_invariants()
@@ -246,6 +242,6 @@ def test_differential_fuzz_poisson_traces(tiny_lm):
         big, out_b = replay(num_blocks=None)
         assert out_s == out_b, f"token streams diverged (seed {seed})"
         assert small.metrics.preemptions >= 1, f"no preemption (seed {seed})"
-        assert small._decode._cache_size() == 1
+        assert small._unified._cache_size() == 1
         small.cache.alloc.check_invariants()
         assert small.cache.alloc.num_used == 0

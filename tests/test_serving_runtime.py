@@ -206,7 +206,7 @@ def _reference_greedy(model, params, prompt, n_new, max_seq=64):
 
 def test_midflight_admission_no_recompile_and_exact_decode(tiny_lm):
     """A request admitted into an in-flight decode batch must (a) not
-    trigger recompilation of the decode program and (b) leave every
+    trigger recompilation of the unified step program and (b) leave every
     request's greedy output identical to the sequential reference."""
     cfg, model, params = tiny_lm
     eng = ContinuousEngine(
@@ -222,11 +222,11 @@ def test_midflight_admission_no_recompile_and_exact_decode(tiny_lm):
         for _ in range(4):                 # p1 alone in flight
             eng.step()
         assert eng.scheduler.num_active == 1
-        n_compiles = eng._decode._cache_size()
+        n_compiles = eng._unified._cache_size()
         eng.submit(p2)                     # joins mid-decode
         while eng.scheduler.has_work:
             eng.step()
-    assert eng._decode._cache_size() == n_compiles == 1
+    assert eng._unified._cache_size() == n_compiles == 1
     done = {r.rid: r.output for r in eng._done}
     assert done[1] == _reference_greedy(model, params, p1, 10)
     assert done[2] == _reference_greedy(model, params, p2, 10)
@@ -234,10 +234,11 @@ def test_midflight_admission_no_recompile_and_exact_decode(tiny_lm):
     assert eng.cache.alloc.num_used == 0   # everything returned to the pool
 
 
-def test_admitted_request_decodes_in_same_step(tiny_lm):
-    """Pinning the documented lifecycle: step() admits, prefills (first
-    token) and then decodes the NEW slot in the SAME step — an admitted
-    request has emitted 2 tokens after one step(), not 1."""
+def test_admitted_request_lifecycle_under_unified_step(tiny_lm):
+    """Pinning the documented lifecycle: the step whose chunk completes the
+    prompt emits the FIRST token (from the unified program's prefill lane);
+    the request joins the decode batch the NEXT step — 1 token after the
+    completing step, 2 after the following one."""
     cfg, model, params = tiny_lm
     eng = ContinuousEngine(
         model, params, single_device_mesh(), DEFAULT_RULES,
@@ -247,8 +248,11 @@ def test_admitted_request_decodes_in_same_step(tiny_lm):
     eng.submit(rng.integers(0, cfg.vocab, size=9).astype(np.int32))
     with eng.mesh:
         assert eng.step()
-    req = next(r for r in eng.scheduler.slots if r is not None)
-    assert len(req.output) == 2    # prefill's first token + same-step decode
+        req = next(r for r in eng.scheduler.slots if r is not None)
+        assert req.prefilled == req.prompt_len      # 9 <= chunk budget
+        assert len(req.output) == 1                 # the prefill-lane token
+        assert eng.step()
+        assert len(req.output) == 2                 # decode-batch member now
 
 
 @pytest.mark.slow
