@@ -41,6 +41,19 @@ is a gap spike suffered by the whole decode batch.  Chunking must hold
 decode TBT p95 at or below the unchunked engine's while trading a bounded
 amount of long-prompt TTFT (their prefill now spans several steps).
 
+A fifth section (`--packing`) is the SEGMENT-PACKING sweep: a short-prompt-
+heavy Poisson workload replayed through a packed engine (one step's chunk
+carries prompt segments from up to `chunk_segments` requests) and a
+single-segment one (each step's chunk carries one request's slice, PR 4
+behaviour) under the same virtual clock.  The compiled chunk lane executes
+at its full width whenever it runs, so the cost model charges chunk-
+carrying steps the LANE WIDTH (not the tokens committed) and decode-only
+steps nothing for the lane — which is exactly the game: packing fills the
+width with useful prompt tokens (chunk fill fraction -> 1), and the
+compiled decode-only fast path skips the lane when there is no prompt
+work at all.  Reported per engine: useful tokens/s, TTFT p95, chunk fill
+fraction, packed segments and decode-only step counts.
+
 A second section (`--lanes`) reports the PER-LANE breakdown of the plan's
 stage matmul dispatch: the same Poisson workload replayed through an
 xla-only plan, the tuned serve plan (`build_serve_plan` — each stage
@@ -114,6 +127,9 @@ def drive_continuous(engine: ContinuousEngine, workload) -> dict:
         "ttft_p50_s": s["ttft_p50_s"],
         "slot_occupancy": s["slot_occupancy_mean"],
         "cache_occupancy": s["cache_occupancy_mean"],
+        "chunk_fill_frac": s["chunk_fill_frac"],
+        "packed_segments": int(s["packed_segments"]),
+        "decode_only_steps": int(s["decode_only_steps"]),
         "tokens": int(s["tokens_out"]),
         "done": len(done),
     }
@@ -303,11 +319,18 @@ def interference_workload(rng: np.random.Generator, n: int, vocab: int,
 
 
 def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
-                    chunk_tokens, c0: float = 0.25, c_tok: float = 0.125):
-    """Replay the workload under a deterministic virtual clock: each step
-    costs c0 + c_tok x (decode rows + chunk tokens it carried).  Same cost
-    model for both engines, so the comparison isolates SCHEDULING — how
-    prompt work is sliced — from kernel speed.
+                    chunk_tokens, chunk_segments: int = None,
+                    c0: float = 0.25, c_tok: float = 0.125):
+    """Replay the workload under a deterministic virtual clock: a step
+    that carries prompt work costs c0 + c_tok x (decode rows + the chunk
+    lane's COMPILED width), a decode-only step costs c0 + c_tok x decode
+    rows.  The lane-width charge is the honest price of the unified step —
+    the compiled chunk lane executes at full width however little of it is
+    filled — so the model makes both wins measurable: segment packing
+    raises the useful tokens bought per lane charge (fill fraction), and
+    the decode-only fast path drops the charge entirely on chunk-less
+    steps.  Same cost model for every engine, so comparisons isolate
+    SCHEDULING — how prompt work is sliced and packed — from kernel speed.
 
     The headline interference metric is the DECODE TIME-BETWEEN-TOKENS
     distribution: every (in-flight decoder, step) pair contributes that
@@ -317,8 +340,10 @@ def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
     import dataclasses as _dc
 
     clock = {"t": 0.0}
-    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
-                           _dc.replace(rcfg, chunk_tokens=chunk_tokens),
+    sized = _dc.replace(rcfg, chunk_tokens=chunk_tokens)
+    if chunk_segments is not None:
+        sized = _dc.replace(sized, chunk_segments=chunk_segments)
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES, sized,
                            now_fn=lambda: clock["t"])
     by_rid = {}
     for w in workload:
@@ -330,22 +355,23 @@ def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
     with eng.mesh:
         while eng.scheduler.has_work:
             n_occ = len(eng.metrics.slot_occupancy)
-            n_chunk = eng.metrics.chunk_tokens_committed
+            n_chunk_steps = eng.metrics.chunk_steps
             if eng.step():
                 dec_rows = 0
                 if len(eng.metrics.slot_occupancy) > n_occ:
                     dec_rows = round(eng.metrics.slot_occupancy[-1]
                                      * eng.cfg.max_slots)
-                chunk_toks = eng.metrics.chunk_tokens_committed - n_chunk
-                cost = c0 + c_tok * (dec_rows + chunk_toks)
+                lane = (eng.cfg.chunk_width
+                        if eng.metrics.chunk_steps > n_chunk_steps else 0)
+                cost = c0 + c_tok * (dec_rows + lane)
                 clock["t"] += cost
                 tbt_gaps.extend([cost] * dec_rows)
             else:
                 clock["t"] += c0 / 4          # idle tick (future arrivals)
     eng.metrics.end_time = clock["t"]
     done = eng._done
-    short = [r.latency_s for r in done if not by_rid[r.rid]["long"]]
-    long_ttft = [r.ttft_s for r in done if by_rid[r.rid]["long"]]
+    short = [r.latency_s for r in done if not by_rid[r.rid].get("long")]
+    long_ttft = [r.ttft_s for r in done if by_rid[r.rid].get("long")]
     s = eng.metrics.summary()
     return {
         "decode_tbt_p50_s": percentile(tbt_gaps, 50),
@@ -353,8 +379,13 @@ def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
         "decode_tbt_max_s": max(tbt_gaps, default=0.0),
         "short_latency_p95_s": percentile(short, 95),
         "long_ttft_p95_s": percentile(long_ttft, 95),
+        "ttft_p95_s": percentile([r.ttft_s for r in done], 95),
         "tokens_per_s": s["tokens_per_s"],
         "chunks": int(s["prefill_chunks"]),
+        "chunk_steps": int(s["chunk_steps"]),
+        "chunk_fill_frac": s["chunk_fill_frac"],
+        "packed_segments": int(s["packed_segments"]),
+        "decode_only_steps": int(s["decode_only_steps"]),
         "preemptions": int(s["preemptions"]),
         "done": len(done),
     }
@@ -395,12 +426,52 @@ def interference_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
     return results
 
 
+# --------------------------------------------------- segment-packing sweep
+def packing_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
+                  requests: int = 24, seed: int = 0, chunk_tokens: int = 32,
+                  rate_hz: float = 1.5, verbose: bool = True) -> dict:
+    """Useful tokens/s with vs without segment packing on a short-prompt-
+    heavy Poisson workload (virtual clock — deterministic).  Every prompt
+    is far smaller than the chunk budget, so the single-segment engine
+    (PR 4 behaviour: one request's slice per step) pays the full compiled
+    lane width for a mostly idle chunk each prefill step; the packed
+    engine carries several prompts' segments per step, buying more useful
+    prompt tokens for the same lane charge — higher chunk fill fraction,
+    fewer chunk steps, better tokens/s AND better TTFT p95 (short prompts
+    stop queueing behind one-per-step chunk scheduling)."""
+    rng = np.random.default_rng(seed)
+    workload = make_workload(rng, requests, cfg.vocab, rate_hz,
+                             prompt_lo=4, prompt_hi=12, new_lo=4, new_hi=12)
+    results = {}
+    for label, segs in (("packed", max(2, rcfg.chunk_segments)),
+                        ("single-seg", 1)):
+        r = _replay_virtual(model, params, mesh, rcfg, workload,
+                            chunk_tokens, chunk_segments=segs)
+        results[label] = r
+        if verbose:
+            print(f"{label:10s}: {r['tokens_per_s']:7.2f} tok/s | "
+                  f"ttft p95 {r['ttft_p95_s']:6.2f} | "
+                  f"chunk fill {r['chunk_fill_frac']:4.0%} "
+                  f"({r['chunks']:3d} chunks / {r['chunk_steps']:3d} steps) | "
+                  f"packed segs {r['packed_segments']:3d} | "
+                  f"decode-only {r['decode_only_steps']:3d} | "
+                  f"{r['done']} reqs (virtual s)")
+    if verbose:
+        ok = (results["packed"]["tokens_per_s"]
+              > results["single-seg"]["tokens_per_s"]
+              and results["packed"]["packed_segments"] > 0)
+        print("segment-packing check (packed tokens/s > single-segment, "
+              f"packing observed): {'PASS' if ok else 'MISS'}")
+    return results
+
+
 # -------------------------------------------------------------------- harness
 def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           rate_hz: float = 0.0, verbose: bool = True,
           lanes: bool = True, lane_requests: int = 12,
           pressure: bool = True, interference: bool = True,
-          interference_requests: int = 24) -> dict:
+          interference_requests: int = 24, packing: bool = True,
+          packing_requests: int = 24) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
     model = build_model(cfg)
@@ -460,10 +531,20 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
               f"p50 {cont['latency_p50_s']:6.2f}s  p95 {cont['latency_p95_s']:6.2f}s | "
               f"ttft p50 {cont['ttft_p50_s']:.2f}s | slot occ "
               f"{cont['slot_occupancy']:.0%} | cache occ {cont['cache_occupancy']:.0%}")
+        print(f"chunk lane : fill {cont['chunk_fill_frac']:.0%} | packed segs "
+              f"{cont['packed_segments']} | decode-only steps "
+              f"{cont['decode_only_steps']}")
         print(f"continuous-batching speedup: {speedup:.2f}x tokens/s "
               f"(target >= 1.3x at equal-or-better p95: "
               f"{'PASS' if speedup >= 1.3 and cont['latency_p95_s'] <= fixed['latency_p95_s'] else 'MISS'})")
     out = {"fixed": fixed, "continuous": cont, "speedup": speedup}
+    if packing:
+        if verbose:
+            print("--- segment-packing sweep (short-prompt-heavy Poisson "
+                  "mix; packed vs single-segment chunking; virtual clock) ---")
+        out["packing"] = packing_sweep(model, params, mesh, cfg, rcfg,
+                                       requests=packing_requests, seed=seed,
+                                       verbose=verbose)
     if interference:
         if verbose:
             print("--- prefill-interference sweep (long/short Poisson mix; "
@@ -494,6 +575,19 @@ def run(csv_rows):
                      f"p95={r['continuous']['latency_p95_s']:.2f}s"))
     csv_rows.append(("serve_speedup_x", r["speedup"],
                      "continuous vs fixed, same Poisson workload"))
+    csv_rows.append(("serve_chunk_fill_frac",
+                     r["continuous"]["chunk_fill_frac"],
+                     f"packed_segments={r['continuous']['packed_segments']} "
+                     f"decode_only_steps="
+                     f"{r['continuous']['decode_only_steps']}"))
+    for label, pr in r.get("packing", {}).items():
+        csv_rows.append((f"serve_packing_{label.replace('-', '_')}_tok_s",
+                         pr["tokens_per_s"],
+                         f"ttft_p95={pr['ttft_p95_s']:.2f} "
+                         f"fill={pr['chunk_fill_frac']:.2f} "
+                         f"packed_segments={pr['packed_segments']} "
+                         f"decode_only={pr['decode_only_steps']} "
+                         f"virtual-clock"))
     for label, ir in r.get("interference", {}).items():
         csv_rows.append((f"serve_interference_{label}_decode_tbt_p95_s",
                          ir["decode_tbt_p95_s"],
@@ -529,9 +623,25 @@ if __name__ == "__main__":
                     help="skip the prefill-interference (chunking) sweep")
     ap.add_argument("--interference-requests", type=int, default=24,
                     help="requests in the long/short interference mix")
+    ap.add_argument("--no-packing", action="store_true",
+                    help="skip the segment-packing sweep")
+    ap.add_argument("--packing-requests", type=int, default=24,
+                    help="requests in the short-prompt packing mix")
+    ap.add_argument("--require-decode-only", action="store_true",
+                    help="exit non-zero unless the headline continuous run "
+                         "dispatched the decode-only fast path (CI guard)")
     args = ap.parse_args()
-    bench(args.requests, args.slots, args.seed, args.rate,
-          lanes=not args.no_lanes, lane_requests=args.lane_requests,
-          pressure=not args.no_pressure,
-          interference=not args.no_interference,
-          interference_requests=args.interference_requests)
+    result = bench(args.requests, args.slots, args.seed, args.rate,
+                   lanes=not args.no_lanes, lane_requests=args.lane_requests,
+                   pressure=not args.no_pressure,
+                   interference=not args.no_interference,
+                   interference_requests=args.interference_requests,
+                   packing=not args.no_packing,
+                   packing_requests=args.packing_requests)
+    if args.require_decode_only:
+        n = result["continuous"]["decode_only_steps"]
+        if n == 0:
+            print("decode-only guard: FAIL — the headline continuous run "
+                  "never dispatched the decode-only fast path")
+            raise SystemExit(1)
+        print(f"decode-only guard: PASS ({n} decode-only steps)")

@@ -166,8 +166,21 @@ def attention_cost(op: OpDesc, cfg: Config, chip: hw.Chip = hw.TPU_V5E) -> CostB
         + qt * bq * hd                    # out
     )
     mem_s = traffic / (chip.hbm_bw * _dma_eff(hd * item))
-    overhead = LAUNCH_OVERHEAD_S + grid * GRID_STEP_OVERHEAD_S
-    return CostBreakdown(compute_s, mem_s, overhead)
+    launch, steps = LAUNCH_OVERHEAD_S, grid * GRID_STEP_OVERHEAD_S
+    ns = int(cfg.get("max_segments") or 0)
+    if ns >= 1:
+        # Segment-packed chunk attention (the serve graph's prefill_chunk
+        # stage): one packed invocation commits up to `ns` requests'
+        # prompt segments, replacing `ns` single-segment launches — so the
+        # launch overhead amortizes across the packing width — while the
+        # kernel's segment grid axis multiplies its (mostly skipped, but
+        # still issued) grid steps by `ns`.  The trade-off gives the race
+        # a real, deterministic optimum instead of a tie broken by search
+        # order: small widths pay a full launch per request stream, large
+        # widths drown in grid-step issue cost.
+        launch = LAUNCH_OVERHEAD_S / ns
+        steps *= ns
+    return CostBreakdown(compute_s, mem_s, launch + steps)
 
 
 _KIND_COST = {"matmul": matmul_cost, "conv2d": conv2d_cost, "attention": attention_cost}

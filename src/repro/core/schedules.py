@@ -240,7 +240,12 @@ class AttentionTemplate(Template):
     """Flash-attention schedule: online-softmax over KV blocks.
 
     Tunables: block_q, block_kv sizes; whether the (b,h) grid axis is
-    'arbitrary' (parallel) or the kv axis is innermost.
+    'arbitrary' (parallel) or the kv axis is innermost.  Serve-graph
+    `prefill_chunk` ops (the segment-packed chunk lane of the unified
+    serving step) additionally race `max_segments` — the packing width of
+    the segmented kernel's block_q x max-segments grid, which the
+    scheduler consumes as its per-step packing cap
+    (`PlanRouter.chunk_segments`).
     """
 
     name = "pallas_attention"
@@ -248,13 +253,19 @@ class AttentionTemplate(Template):
 
     BQ = [128, 256, 512, 1024]
     BKV = [128, 256, 512, 1024, 2048]
+    MAX_SEGMENTS = [1, 2, 4, 8]
 
     def space(self, op: OpDesc) -> Dict[str, List[Any]]:
         d = op.d
-        return {
+        s = {
             "block_q": [b for b in self.BQ if b <= max(128, d["q"])],
             "block_kv": [b for b in self.BKV if b <= max(128, d["kv"])],
         }
+        if op.label.startswith("prefill_chunk"):
+            # packing can't exceed one request per query row
+            s["max_segments"] = [m for m in self.MAX_SEGMENTS
+                                 if m <= max(1, d["q"])]
+        return s
 
     def validate(self, op: OpDesc, cfg: Config, chip: hw.Chip = hw.TPU_V5E) -> bool:
         d = op.d

@@ -21,9 +21,12 @@ unwritten cache tail.
 The *paged* variants serve the continuous-batching runtime: the KV argument
 is the shared physical block pool and a scalar-prefetched block table
 indirects each grid step to its physical block — `flash_decode_paged` for
-one query row per slot, `flash_prefill_paged` for a prompt *chunk* of one
-request (the block-table-aware prefill kernel of the unified token-budget
-step; chunk geometry travels in the scalar lane, so it never recompiles).
+one query row per slot, `flash_prefill_paged` for a *segment-packed* prompt
+chunk (the block-table-aware prefill kernel of the unified token-budget
+step): the chunk's query rows carry contiguous prompt segments from up to S
+requests, each segment's `(row_offset, seg_len, kv_start)` descriptor and
+block table travel in the scalar-prefetch lane, and the kernel masks
+cross-segment attention, so packing geometry is data and never recompiles.
 """
 
 from __future__ import annotations
@@ -214,56 +217,74 @@ def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def _paged_prefill_kernel(info_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                          m_ref, l_ref, acc_ref, *, nbt: int, block_size: int,
-                          block_q: int, group: int, scale: float, out_dtype):
-    """One (query-tile, logical-block) grid step of paged chunked-prefill
-    attention — `_paged_decode_kernel` generalised from 1 query row to a
-    chunk of `block_q` prompt positions (x `group` query heads each).
+                          m_ref, l_ref, acc_ref, *, ns: int, nbt: int,
+                          block_size: int, block_q: int, group: int,
+                          scale: float, out_dtype):
+    """One (query-tile, segment, logical-block) grid step of segment-packed
+    paged prefill attention — `_paged_decode_kernel` generalised from 1
+    query row to a chunk of `block_q` prompt positions (x `group` query
+    heads each) carrying contiguous segments from up to `ns` requests.
 
     The physical KV block this step reads was selected by the BlockSpec
-    index map from the scalar-prefetched block table, so the chunk attends
-    to every previously *committed* row of its request (earlier chunks +
-    its own rows, scattered before the kernel runs) without ever gathering
-    a contiguous cache.  Causality is positional: query row r sits at
-    absolute position `chunk_start + tile_offset + r // group` and masks
+    index map from segment s's scalar-prefetched block table, so each
+    segment's rows attend to every previously *committed* row of their OWN
+    request (earlier chunks + the segment's rows, scattered before the
+    kernel runs) and never to a co-packed neighbour's: rows outside the
+    segment's [q0, q0+qn) row span are masked to NEG_INF for this (s, j)
+    step.  Causality is positional within the segment: chunk row r sits at
+    absolute position `kv_start + r - q0` of its request and masks
     strictly-future key rows, which also hides whatever stale data lives
-    beyond the request's committed length."""
+    beyond the request's committed length.  A row's running max stays at
+    NEG_INF through foreign segments' blocks (every entry masked -> p==1
+    garbage), and the first in-segment block rescales that garbage by
+    alpha = exp(NEG_INF - m_real) == 0 exactly, so packing is invisible to
+    the online softmax; rows past the packed fill never see an unmasked
+    block and are discarded by the caller."""
     i = pl.program_id(0)
-    j = pl.program_id(1)
+    s = pl.program_id(1)
+    j = pl.program_id(2)
 
-    @pl.when(j == 0)
+    @pl.when((s == 0) & (j == 0))
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    start = info_ref[0]          # chunk_start: committed rows before this chunk
-    total = info_ref[1]          # chunk_start + chunk_len
-    qpos_max = start + (i + 1) * block_q - 1
+    q0 = info_ref[s, 0]          # segment's first row within the chunk
+    qn = info_ref[s, 1]          # segment length in rows (0 = idle slot)
+    kv0 = info_ref[s, 2]         # committed rows before this segment's chunk
+    total = kv0 + qn             # committed rows once this segment lands
+    tile0 = i * block_q
+    # largest absolute position any of this tile's rows can hold in s's
+    # request (rows beyond the segment are masked in the body)
+    qpos_max = kv0 + tile0 + block_q - 1 - q0
 
-    # Skip KV blocks entirely above this tile's diagonal and blocks holding
-    # no committed row at all (padding rows past chunk_len produce garbage
-    # that the caller discards, so `total` need not mask inside the body).
-    @pl.when((j * block_size <= qpos_max) & (j * block_size < total))
+    # Skip (segment, block) steps that cannot contribute: idle segment
+    # slots, tiles that hold none of the segment's rows, blocks entirely
+    # above the tile's diagonal, and blocks holding no committed row.
+    @pl.when((qn > 0) & (tile0 < q0 + qn) & (tile0 + block_q > q0)
+             & (j * block_size <= qpos_max) & (j * block_size < total))
     def _body():
         q = q_ref[...]                                 # (block_q*group, D)
         k = k_ref[0]                                   # (block_size, D)
         v = v_ref[0]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        qpos = start + i * block_q + row // group
-        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        st = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        row = jax.lax.broadcasted_iota(jnp.int32, st.shape, 0)
+        qrow = tile0 + row // group                    # row within the chunk
+        qpos = kv0 + qrow - q0                         # row's own-request pos
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, st.shape, 1)
+        ok = (qrow >= q0) & (qrow < q0 + qn) & (kpos <= qpos)
+        st = jnp.where(ok, st, NEG_INF)
         m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        m_new = jnp.maximum(m_prev, jnp.max(st, -1, keepdims=True))
+        p = jnp.exp(st - m_new)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
             p.astype(v.dtype), v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    @pl.when(j == nbt - 1)
+    @pl.when((s == ns - 1) & (j == nbt - 1))
     def _finish():
         l = l_ref[...]
         l = jnp.where(l == 0.0, 1.0, l)
@@ -274,29 +295,35 @@ def flash_prefill_paged(
     q: jnp.ndarray,             # (C, G, D) one KV-head group's chunk queries
     k_pool: jnp.ndarray,        # (num_blocks, block_size, D) one KV head's pool
     v_pool: jnp.ndarray,
-    block_table: jnp.ndarray,   # (nbt,) int32 physical block ids
-    chunk_start,                # scalar int32 — committed rows before the chunk
-    total_len,                  # scalar int32 — chunk_start + chunk_len
+    seg_tables: jnp.ndarray,    # (S, nbt) int32 per-segment physical block ids
+    seg_info: jnp.ndarray,      # (S, 3) int32 [row_offset, seg_len, kv_start]
     *,
     block_q: Optional[int] = None,
     scale: Optional[float] = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Block-table-aware chunked-prefill flash attention (single request).
+    """Block-table-aware segment-packed prefill flash attention.
 
-    `flash_decode_paged` generalised from one query row to a prompt chunk:
-    the grid walks (query tiles x the request's *logical* blocks) and the
-    scalar-prefetched table indirects to physical pool blocks, so a chunk's
-    queries attend to all previously committed KV — earlier chunks included
-    — without materialising a gathered contiguous cache.  `chunk_start` and
-    `total_len` ride in the scalar-prefetch lane too, so chunk geometry is
-    *data*, never a new compile.  `block_q` (prompt positions per query
-    tile) is the schedule knob the plan's `prefill_chunk` stage tunes."""
+    `flash_decode_paged` generalised from one query row to a packed prompt
+    chunk: the (C, G, D) query buffer carries contiguous prompt segments
+    from up to S requests (segment s occupies chunk rows
+    [seg_info[s,0], seg_info[s,0]+seg_info[s,1])), the grid walks
+    (query tiles x segments x each segment's *logical* blocks), and segment
+    s's scalar-prefetched table indirects to its request's physical pool
+    blocks, so every row attends to all previously committed KV of its OWN
+    request — earlier chunks included, co-packed neighbours excluded —
+    without materialising a gathered contiguous cache.  The descriptors
+    ride in the scalar-prefetch lane, so packing geometry is *data*, never
+    a new compile; a single-request chunk is just S=1 (or idle descriptor
+    rows with seg_len 0).  `block_q` (prompt positions per query tile) is
+    the schedule knob the plan's `prefill_chunk` stage tunes — together
+    with the segment axis it defines the kernel's block_q x max-segments
+    grid."""
     if pltpu is None:  # pragma: no cover - no TPU pallas module at all
         raise NotImplementedError("paged prefill kernel needs pallas TPU")
     c, g, d = q.shape
     _, block_size, _ = k_pool.shape
-    nbt = block_table.shape[0]
+    ns, nbt = seg_tables.shape
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
     bq = min(block_q or c, c)
     c_pad = -(-c // bq) * bq
@@ -305,22 +332,20 @@ def flash_prefill_paged(
         qf = jnp.pad(qf, ((0, (c_pad - c) * g), (0, 0)))
     rows = bq * g
 
-    info = jnp.stack([jnp.asarray(chunk_start, jnp.int32),
-                      jnp.asarray(total_len, jnp.int32)])
     kernel = functools.partial(
-        _paged_prefill_kernel, nbt=nbt, block_size=block_size, block_q=bq,
-        group=g, scale=scale, out_dtype=q.dtype)
+        _paged_prefill_kernel, ns=ns, nbt=nbt, block_size=block_size,
+        block_q=bq, group=g, scale=scale, out_dtype=q.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,      # (chunk_start, total) + block table
-        grid=(c_pad // bq, nbt),
+        num_scalar_prefetch=2,      # segment descriptors + block tables
+        grid=(c_pad // bq, ns, nbt),
         in_specs=[
-            pl.BlockSpec((rows, d), lambda i, j, info, bt: (i, 0)),
+            pl.BlockSpec((rows, d), lambda i, s, j, info, bt: (i, 0)),
             pl.BlockSpec((1, block_size, d),
-                         lambda i, j, info, bt: (bt[j], 0, 0)),
+                         lambda i, s, j, info, bt: (bt[s, j], 0, 0)),
             pl.BlockSpec((1, block_size, d),
-                         lambda i, j, info, bt: (bt[j], 0, 0)),
+                         lambda i, s, j, info, bt: (bt[s, j], 0, 0)),
         ],
-        out_specs=pl.BlockSpec((rows, d), lambda i, j, info, bt: (i, 0)),
+        out_specs=pl.BlockSpec((rows, d), lambda i, s, j, info, bt: (i, 0)),
         scratch_shapes=[
             _scratch((rows, 1)),
             _scratch((rows, 1)),
@@ -332,7 +357,8 @@ def flash_prefill_paged(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((c_pad * g, d), q.dtype),
         interpret=interpret,
-    )(info, block_table.astype(jnp.int32), qf, k_pool, v_pool)
+    )(seg_info.astype(jnp.int32), seg_tables.astype(jnp.int32),
+      qf, k_pool, v_pool)
     return out.reshape(c_pad, g, d)[:c]
 
 

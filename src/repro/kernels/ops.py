@@ -228,6 +228,45 @@ def attention_decode_paged(
     return jnp.concatenate(outs, axis=1)
 
 
+def attention_prefill_packed(
+    q: jnp.ndarray,             # (1, C, H, D) packed chunk queries
+    k_pool: jnp.ndarray,        # (num_blocks, block_size, Hkv, D)
+    v_pool: jnp.ndarray,
+    seg_tables: jnp.ndarray,    # (S, nbt) per-segment physical block ids
+    seg_info: jnp.ndarray,      # (S, 3) int32 [row_offset, seg_len, kv_start]
+    *,
+    scale: Optional[float] = None,
+    config: Config = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Segment-packed paged prefill attention over the block pool (the
+    prefill lane of the unified serving step).
+
+    Same per-KV-head grouping as `attention_decode_paged`, but the query
+    buffer carries contiguous prompt segments from up to S requests: each
+    row attends causally to every committed row of its OWN request (earlier
+    chunks included, co-packed neighbours masked) through its segment's
+    scalar-prefetched block table.  The descriptors are traced data —
+    packing geometry never recompiles.  The tuned `config` contributes
+    `block_q` (prompt positions per query tile); together with the segment
+    count it fixes the kernel's block_q x max-segments grid, the knobs the
+    plan's `prefill_chunk` stage races."""
+    cfg = dict(_DEF_ATT, **(config or {}))
+    _, c, h, d = q.shape
+    hkv = k_pool.shape[2]
+    group = h // hkv
+    bq = min(cfg.get("block_q") or c, c)
+    info = jnp.asarray(seg_info, jnp.int32)
+
+    outs = []
+    for g in range(hkv):  # per-KV-head grouping keeps the pool un-replicated
+        qg = q[0, :, g * group: (g + 1) * group]        # (C, group, D)
+        outs.append(flash_prefill_paged(
+            qg, k_pool[:, :, g], v_pool[:, :, g], seg_tables, info,
+            block_q=bq, scale=scale, interpret=interpret))
+    return jnp.concatenate(outs, axis=1)[None]          # (1, C, H, D)
+
+
 def attention_prefill_paged(
     q: jnp.ndarray,             # (1, C, H, D) one request's chunk queries
     k_pool: jnp.ndarray,        # (num_blocks, block_size, Hkv, D)
@@ -240,31 +279,15 @@ def attention_prefill_paged(
     config: Config = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Paged chunked-prefill attention over the block pool (the prefill lane
-    of the unified serving step).
-
-    Same per-KV-head grouping as `attention_decode_paged`, but the query is
-    a whole prompt chunk: each row attends causally to every committed row
-    of its request (earlier chunks included) through the scalar-prefetched
-    block table.  `chunk_start`/`chunk_len` are traced scalars — chunk
-    geometry is data, so one compiled program covers every admission.  The
-    tuned `config` contributes `block_q` (prompt positions per query tile),
-    the knob the plan's `prefill_chunk` stage races."""
-    cfg = dict(_DEF_ATT, **(config or {}))
-    _, c, h, d = q.shape
-    hkv = k_pool.shape[2]
-    group = h // hkv
-    bq = min(cfg.get("block_q") or c, c)
-    total = (jnp.asarray(chunk_start, jnp.int32)
-             + jnp.asarray(chunk_len, jnp.int32))
-
-    outs = []
-    for g in range(hkv):  # per-KV-head grouping keeps the pool un-replicated
-        qg = q[0, :, g * group: (g + 1) * group]        # (C, group, D)
-        outs.append(flash_prefill_paged(
-            qg, k_pool[:, :, g], v_pool[:, :, g], block_tables[0],
-            chunk_start, total, block_q=bq, scale=scale, interpret=interpret))
-    return jnp.concatenate(outs, axis=1)[None]          # (1, C, H, D)
+    """Single-request chunked prefill — the S=1 special case of
+    `attention_prefill_packed` (kept as the stable entry point for callers
+    that carry one request's chunk per step)."""
+    zero = jnp.zeros((), jnp.int32)
+    seg_info = jnp.stack([zero, jnp.asarray(chunk_len, jnp.int32),
+                          jnp.asarray(chunk_start, jnp.int32)])[None]
+    return attention_prefill_packed(
+        q, k_pool, v_pool, block_tables, seg_info,
+        scale=scale, config=config, interpret=interpret)
 
 
 def fused_elementwise(

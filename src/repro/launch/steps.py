@@ -298,34 +298,37 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
                      decode_matmul_table=None, chunk_matmul_table=None,
                      interpret: bool = True):
     """(params, k_pool, v_pool,
-        dec_tables, dec_lengths, dec_tokens,     # decode lane: every slot
-        ch_tokens, ch_tables, ch_start, ch_len)  # prefill lane: one chunk
-        -> (dec_next (S,), ch_next scalar, k_pool, v_pool)
+        dec_tables, dec_lengths, dec_tokens,   # decode lane: every slot
+        ch_tokens, seg_tables, seg_info)       # prefill lane: packed chunk
+        -> (dec_next (slots,), seg_next (S,), k_pool, v_pool)
 
-    THE serving step program: one engine step = one invocation.  Each step
-    carries up to `chunk_tokens` of pending prompt work (ch_tokens is a
-    fixed-width (1, C) chunk; ch_start/ch_len are traced scalars describing
-    which slice of which prompt it is) alongside a decode token for every
-    in-flight slot.  Both lanes share the paged pool: the chunk lane
-    scatters its K/V rows into the chunk request's blocks (committed
-    incrementally, chunk by chunk) and the decode lane appends one row per
-    active slot, all inside a single compiled program.
+    THE serving step program for steps that carry prompt work: each
+    invocation carries up to `chunk_tokens` of pending prompt work —
+    ch_tokens is a fixed-width (1, C) buffer PACKED with contiguous prompt
+    segments from up to S requests, described by the traced (S, 3)
+    descriptor array `seg_info` ([row_offset, seg_len, kv_start] per
+    segment) and the (S, nbt) per-segment block tables — alongside a
+    decode token for every in-flight slot.  All lanes share the paged
+    pool: every chunk row scatters its K/V into its OWN segment's blocks
+    (committed incrementally, chunk by chunk) and the decode lane appends
+    one row per active slot, all inside a single compiled program.
 
     Every argument shape is static in (slots, pool blocks, table width,
-    chunk budget), so admission, chunk progress, retirement, preemption and
-    resume are pure data updates — this program compiles exactly ONCE and
-    the power-of-two prefill-bucket ladder of the old two-program runtime
-    is gone entirely.  Idle lanes are masked by data: a step with no chunk
-    passes ch_len=0 with an all-null chunk table (rows divert to the sink
-    block), and slots that are empty or still prefilling carry all-null
-    decode tables with length 0.  Masking hides results, not FLOPs — an
-    idle chunk lane still executes at its compiled width, so the chunk
-    budget is a price every step pays (keep it modest; see
-    RuntimeConfig.chunk_tokens).
+    chunk budget, segment slots), so admission, chunk progress, packing,
+    retirement, preemption and resume are pure data updates — this program
+    compiles exactly ONCE.  Idle segment slots are masked by data (seg_len
+    0 with an all-null table; padding rows divert to the sink block), and
+    slots that are empty or still prefilling carry all-null decode tables
+    with length 0.  Masking hides results, not FLOPs — the chunk lane
+    executes at its compiled width whenever THIS program runs, which is
+    exactly why chunk-less steps dispatch `jit_decode_only_step` instead
+    (the second and last step executable; see ContinuousEngine.step).
 
-    The attention backends and the per-stage matmul tables (the plan's
-    `decode` and `prefill_chunk` stage choices) are closed over — static at
-    trace time, zero per-step dispatch cost."""
+    seg_next holds each segment's next-token argmax, valid only for
+    segments that complete their prompt this step (the host consumes
+    exactly those).  The attention backends and the per-stage matmul
+    tables (the plan's `decode` and `prefill_chunk` stage choices) are
+    closed over — static at trace time, zero per-step dispatch cost."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     pool_shard = paged_pool_sharding(model, mesh, rules)
@@ -333,16 +336,16 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
     def unified_step(params, k_pool, v_pool, dec_tables, dec_lengths,
-                     dec_tokens, ch_tokens, ch_tables, ch_start, ch_len):
+                     dec_tokens, ch_tokens, seg_tables, seg_info):
         with activation_rules(rules):
-            # prefill lane: one request's prompt chunk, K/V committed to its
-            # blocks in-program (no separate commit dispatch)
+            # prefill lane: a packed chunk of prompt segments, K/V committed
+            # to each segment's blocks in-program (no separate commit)
             with matmul_dispatch(chunk_matmul_table, interpret=interpret):
-                ch_logits, k_pool, v_pool = model.prefill_chunk_paged(
-                    params, k_pool, v_pool, ch_tables, ch_tokens,
-                    ch_start, ch_len, attn_backend=chunk_attn_backend,
+                ch_logits, k_pool, v_pool = model.prefill_packed_paged(
+                    params, k_pool, v_pool, seg_tables, ch_tokens,
+                    seg_info, attn_backend=chunk_attn_backend,
                     attn_config=chunk_attn_config, attn_interpret=interpret)
-            # decode lane: one token for every slot (the two lanes touch
+            # decode lane: one token for every slot (the lanes touch
             # disjoint blocks — a request never prefills and decodes in the
             # same step — so XLA is free to schedule them together)
             with matmul_dispatch(decode_matmul_table, interpret=interpret):
@@ -350,18 +353,63 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
                     params, k_pool, v_pool, dec_tables, dec_lengths,
                     dec_tokens, attn_backend=decode_attn_backend,
                     attn_interpret=interpret)
-        # greedy sampling fused for both lanes: ch_next is the first token
-        # of the chunk's request, valid only when the chunk completes its
-        # prompt (the host consumes it exactly then)
+        # greedy sampling fused for all lanes: seg_next[s] is the first
+        # token of segment s's request, valid only when that segment
+        # completes its prompt (the host consumes it exactly then)
         nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        ch_next = jnp.argmax(ch_logits[0, -1], -1).astype(jnp.int32)
-        return nxt, ch_next, k_pool, v_pool
+        seg_next = jnp.argmax(ch_logits[0], -1).astype(jnp.int32)
+        return nxt, seg_next, k_pool, v_pool
 
     return jax.jit(
         unified_step,
         in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
-                      row_shard, None, None, None, None),
+                      row_shard, None, None, None),
         out_shardings=(None, None, pool_shard, pool_shard),
+        donate_argnums=(1, 2),
+    )
+
+
+def jit_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
+                         decode_attn_backend: str = "xla",
+                         decode_matmul_table=None, interpret: bool = True):
+    """(params, k_pool, v_pool, dec_tables, dec_lengths, dec_tokens)
+        -> (dec_next (slots,), k_pool, v_pool)
+
+    The decode-only fast path: the unified step's decode lane compiled
+    WITHOUT the chunk lane.  `jit_unified_step` executes its prefill lane
+    at the full compiled chunk width even when every descriptor row is
+    idle — the budget would price every step — so the engine dispatches
+    this program instead whenever no prompt work is pending.  Pool/table
+    shapes and shardings match the unified program exactly (the donated
+    pools ping-pong between the two executables without a layout shift),
+    and the decode lane's float program is identical — an active slot's
+    attention never reads the sink block the idle chunk lane would have
+    scribbled on, so switching programs step to step is invisible to the
+    token streams.  With it the serving runtime owns exactly TWO step
+    executables, chosen per step by whether prompt work exists; admission
+    still compiles nothing."""
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    pool_shard = paged_pool_sharding(model, mesh, rules)
+    slot_shard = NamedSharding(mesh, rules.spec(("batch",)))
+    row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+
+    def decode_only_step(params, k_pool, v_pool, dec_tables, dec_lengths,
+                         dec_tokens):
+        with activation_rules(rules):
+            with matmul_dispatch(decode_matmul_table, interpret=interpret):
+                logits, k_pool, v_pool = model.decode_step_paged(
+                    params, k_pool, v_pool, dec_tables, dec_lengths,
+                    dec_tokens, attn_backend=decode_attn_backend,
+                    attn_interpret=interpret)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return nxt, k_pool, v_pool
+
+    return jax.jit(
+        decode_only_step,
+        in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
+                      row_shard),
+        out_shardings=(None, pool_shard, pool_shard),
         donate_argnums=(1, 2),
     )
 

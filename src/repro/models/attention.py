@@ -261,42 +261,75 @@ def attn_decode(
     return y, k_cache, v_cache
 
 
-# ----------------------------------------- paged (block-table) chunked prefill
-def attn_prefill_chunk_paged(
+# ------------------------------- paged (block-table) segment-packed prefill
+def packed_row_map(seg_info, c: int):
+    """Per-row segment assignment for a packed prompt chunk.
+
+    `seg_info` is the (S, 3) int32 descriptor array [row_offset, seg_len,
+    kv_start]: segment s occupies the contiguous chunk rows
+    [row_offset, row_offset + seg_len) and its first row sits at absolute
+    position `kv_start` of its own request (segments are packed from row 0
+    in order; idle descriptor rows carry seg_len 0 with row_offset at the
+    fill level, so offsets stay monotone).  Returns
+
+        sid   (C,) int32 — each chunk row's segment index (clamped),
+        pos   (C,) int32 — the row's absolute position in its OWN request,
+        valid (C,) bool  — whether the row carries a real prompt token.
+
+    All of it is arithmetic on traced data: packing geometry never changes
+    the compiled program."""
+    info = jnp.asarray(seg_info, jnp.int32)
+    ns = info.shape[0]
+    q0, qn, kv0 = info[:, 0], info[:, 1], info[:, 2]
+    r = jnp.arange(c, dtype=jnp.int32)
+    seg_end = q0 + qn
+    sid = jnp.minimum(jnp.sum((r[:, None] >= seg_end[None, :]).astype(jnp.int32),
+                              axis=1), ns - 1)
+    valid = (r >= q0[sid]) & (r < seg_end[sid])
+    pos = kv0[sid] + (r - q0[sid])
+    return sid, jnp.where(valid, pos, 0), valid
+
+
+def attn_prefill_packed(
     p: Params,
     cfg: ModelConfig,
-    x: jnp.ndarray,                 # (1, C, d) — one request's prompt chunk
+    x: jnp.ndarray,                 # (1, C, d) — packed prompt segments
     k_pool: jnp.ndarray,            # (num_blocks, block_size, Hkv, hd)
     v_pool: jnp.ndarray,
-    block_tables: jnp.ndarray,      # (1, nbt) physical block ids
+    seg_tables: jnp.ndarray,        # (S, nbt) per-segment physical block ids
     positions: jnp.ndarray,         # (1, C[, 3]) absolute RoPE positions
-    chunk_start,                    # scalar int32: rows committed before chunk
-    chunk_len,                      # scalar int32: real rows in this chunk
+    seg_info: jnp.ndarray,          # (S, 3) [row_offset, seg_len, kv_start]
     *,
     backend: str = "xla",
     backend_config=None,
     interpret: bool = True,
 ):
-    """Chunked-prefill attention against the *paged* KV pool.
+    """Segment-packed prefill attention against the *paged* KV pool.
 
-    The chunk's K/V rows are scattered straight into the request's blocks
-    (positions `chunk_start + i`; padding rows past `chunk_len` divert to
-    the reserved null-sink block), then each query row attends causally to
-    every committed row of the request — earlier chunks included — either
-    through an XLA gather of the slot's logical pool view or through the
-    block-table-aware Pallas kernel (`backend='pallas_attention'`,
-    `kernels.ops.attention_prefill_paged`).  Chunk geometry is carried by
-    traced scalars, so every chunk of every prompt reuses one program."""
+    The chunk's K/V rows are scattered straight into each row's OWN
+    request's blocks (row r of segment s lands at absolute position
+    `kv_start_s + r - row_offset_s`; padding rows beyond the packed fill
+    divert to the reserved null-sink block), then each query row attends
+    causally to every committed row of its request — earlier chunks
+    included, co-packed neighbours excluded — either through a per-row XLA
+    gather of the row's own table or through the segment-aware Pallas
+    kernel (`backend='pallas_attention'`,
+    `kernels.ops.attention_prefill_packed`).  Packing geometry is carried
+    by the traced descriptor array, so every packing of every step reuses
+    one program — and because the XLA lane gathers the SAME full-width
+    table view per row regardless of how rows are grouped into segments,
+    packed and unpacked schedules compute identical float programs per
+    row (byte-identical token streams)."""
     b, c, _ = x.shape
     block_size = k_pool.shape[1]
-    nbt = block_tables.shape[1]
+    ns, nbt = seg_tables.shape
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)
 
-    # incremental commit: row i of the chunk lands at absolute position
-    # chunk_start + i in the request's logical sequence
-    pos = jnp.asarray(chunk_start, jnp.int32) + jnp.arange(c, dtype=jnp.int32)
-    blk = block_tables[0, jnp.clip(pos // block_size, 0, nbt - 1)]
-    blk = jnp.where(jnp.arange(c) < chunk_len, blk, 0)  # padding -> null sink
+    # incremental commit: each row scatters into its own segment's blocks
+    sid, pos, valid = packed_row_map(seg_info, c)
+    row_tables = jnp.asarray(seg_tables, jnp.int32)[sid]          # (C, nbt)
+    blk = row_tables[jnp.arange(c), jnp.clip(pos // block_size, 0, nbt - 1)]
+    blk = jnp.where(valid, blk, 0)                  # padding -> null sink
     off = pos % block_size
     k_pool = k_pool.at[blk, off].set(k_new[0].astype(k_pool.dtype))
     v_pool = v_pool.at[blk, off].set(v_new[0].astype(v_pool.dtype))
@@ -304,26 +337,27 @@ def attn_prefill_chunk_paged(
     hkv, g = cfg.n_kv_heads, cfg.q_per_kv
     if backend.startswith("pallas"):
         from repro.kernels import ops as K
-        out = K.attention_prefill_paged(
-            q, k_pool, v_pool, block_tables, chunk_start, chunk_len,
+        out = K.attention_prefill_packed(
+            q, k_pool, v_pool, seg_tables, seg_info,
             config=backend_config, interpret=interpret)
     else:
-        # XLA lane: gather the request's logical cache view from the pool.
-        # The gather width is always the full table (nbt * block_size) and
-        # the mask is purely positional, so the per-row float program is
-        # identical for every chunk split — chunked and unchunked prefill
-        # agree bitwise on this lane.
-        k_ctx = k_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
-        v_ctx = v_pool[block_tables].reshape(b, nbt * block_size, hkv, cfg.hd)
+        # XLA lane: gather each ROW's logical cache view from the pool via
+        # its segment's table.  The gather width is always the full table
+        # (nbt * block_size) and the mask is purely positional, so the
+        # per-row float program is identical for every chunk split AND for
+        # every packing — chunked, unchunked, packed and single-segment
+        # prefill all agree bitwise on this lane.
+        k_ctx = k_pool[row_tables].reshape(b, c, nbt * block_size, hkv, cfg.hd)
+        v_ctx = v_pool[row_tables].reshape(b, c, nbt * block_size, hkv, cfg.hd)
         scale = 1.0 / np.sqrt(cfg.hd)
         qg = q.reshape(b, c, hkv, g, cfg.hd)
-        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+        logits = jnp.einsum("bqhgd,bqkhd->bhgqk", qg,
                             k_ctx).astype(jnp.float32) * scale
         kpos = jnp.arange(nbt * block_size)[None, None, None, None, :]
         logits = jnp.where(kpos <= pos[None, None, None, :, None],
                            logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(v_ctx.dtype)
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+        out = jnp.einsum("bhgqk,bqkhd->bqhgd", probs,
                          v_ctx).reshape(b, c, cfg.n_heads, cfg.hd)
     y = dense(p["wo"], out.reshape(b, c, cfg.n_heads * cfg.hd))
     return y, k_pool, v_pool

@@ -306,39 +306,42 @@ class DecoderLM:
         logits = lm_head_logits(params["lm_head"], x)
         return logits, ks, vs
 
-    def prefill_chunk_paged(self, params: Params, k_pool: jnp.ndarray,
-                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
-                            tokens: jnp.ndarray, chunk_start, chunk_len,
-                            *, attn_backend: str = "xla",
-                            attn_config: Optional[Dict[str, Any]] = None,
-                            attn_interpret: bool = True):
-        """One prompt *chunk* of one request against the paged KV pool —
-        the prefill lane of the unified serving step.
+    def prefill_packed_paged(self, params: Params, k_pool: jnp.ndarray,
+                             v_pool: jnp.ndarray, seg_tables: jnp.ndarray,
+                             tokens: jnp.ndarray, seg_info: jnp.ndarray,
+                             *, attn_backend: str = "xla",
+                             attn_config: Optional[Dict[str, Any]] = None,
+                             attn_interpret: bool = True):
+        """A segment-packed prompt chunk against the paged KV pool — the
+        prefill lane of the unified serving step.
 
-        tokens: (1, C) with rows [0, chunk_len) real (the prompt slice
-        [chunk_start, chunk_start+chunk_len)) and the rest padding.  Each
-        layer scatters the chunk's K/V into the request's blocks (padding
-        rows divert to the null sink) and attends causally over everything
-        committed so far, so a prompt split across steps computes exactly
-        the single-shot prefill.  `chunk_start`/`chunk_len` are traced
-        scalars: every chunk of every prompt is a pure data update to ONE
-        compiled program — admission never compiles.
+        tokens: (1, C) carrying contiguous prompt segments from up to S
+        requests; `seg_info` is the (S, 3) descriptor array [row_offset,
+        seg_len, kv_start] and `seg_tables` (S, nbt) each segment's block
+        table (idle descriptor rows: seg_len 0, all-null table).  Each
+        layer scatters every row's K/V into its OWN segment's blocks
+        (padding rows divert to the null sink) and attends causally over
+        everything its request committed so far — never a co-packed
+        neighbour — so a prompt split across steps or packed beside others
+        computes exactly the single-shot prefill.  The descriptors are
+        traced data: every packing of every step is a pure data update to
+        ONE compiled program — admission never compiles.
 
-        Returns (logits (1, 1, V) at the chunk's last real row — the first
-        sampled token when the chunk completes the prompt — ks, vs)."""
+        Returns (logits (1, S, V) at each segment's last real row — the
+        first sampled token of every segment that completes its prompt
+        this step — ks, vs)."""
         cfg = self.cfg
         x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
         b, c, _ = x.shape
-        idx = jnp.asarray(chunk_start, jnp.int32) + jnp.arange(c,
-                                                               dtype=jnp.int32)
-        positions = self._position_ids(b, idx)
+        _, pos, _ = A.packed_row_map(seg_info, c)   # pos zeroed on padding
+        positions = self._position_ids(b, pos)
 
         def body(x, layer):
             bp, kp, vp = layer
             h = _norm(cfg, bp["attn_norm"], x)
-            y, kp, vp = A.attn_prefill_chunk_paged(
-                bp["attn"], cfg, h, kp, vp, block_tables, positions,
-                chunk_start, chunk_len, backend=attn_backend,
+            y, kp, vp = A.attn_prefill_packed(
+                bp["attn"], cfg, h, kp, vp, seg_tables, positions,
+                seg_info, backend=attn_backend,
                 backend_config=attn_config, interpret=attn_interpret)
             x = x + y
             h = _norm(cfg, bp["mlp_norm"], x)
@@ -351,8 +354,9 @@ class DecoderLM:
         x, (ks, vs) = runmode.layer_scan(body, x,
                                          (params["blocks"], k_pool, v_pool))
         x = _norm(cfg, params["final_norm"], x)
-        last = jnp.clip(jnp.asarray(chunk_len, jnp.int32) - 1, 0, c - 1)
-        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        info = jnp.asarray(seg_info, jnp.int32)
+        last = jnp.clip(info[:, 0] + info[:, 1] - 1, 0, c - 1)   # (S,)
+        x_last = x[:, last]                                      # (1, S, d)
         logits = lm_head_logits(params["lm_head"], x_last)
         return logits, ks, vs
 

@@ -1,13 +1,19 @@
 from repro.serve.engine import FixedBatchEngine, Request, ServeConfig, ServeEngine
 from repro.serve.kvcache import BlockAllocator, KVCacheConfig, PagedKVCache
 from repro.serve.metrics import ServeMetrics, percentile
-from repro.serve.router import PlanRouter, build_serve_graph, build_serve_plan
+from repro.serve.router import (
+    DEFAULT_CHUNK_TOKENS,
+    PlanRouter,
+    build_serve_graph,
+    build_serve_plan,
+)
 from repro.serve.runtime import ContinuousEngine, RuntimeConfig
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
 __all__ = [
     "BlockAllocator",
     "ContinuousEngine",
+    "DEFAULT_CHUNK_TOKENS",
     "ContinuousScheduler",
     "FixedBatchEngine",
     "KVCacheConfig",

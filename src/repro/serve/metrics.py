@@ -34,11 +34,22 @@ class ServeMetrics:
     requests_done: int = 0
     decode_steps: int = 0
     prefills: int = 0          # prompts whose prefill completed
-    # chunked-prefill accounting: how many unified steps carried prompt work
-    # and how many prompt tokens they committed (chunks > prefills means
-    # prompts were split across steps; TTFT under chunking spans them all)
+    # chunked-prefill accounting: one *chunk* is one request's contiguous
+    # prompt slice committed in one step (chunks > prefills means prompts
+    # were split across steps; TTFT under chunking spans them all).  With
+    # segment packing several chunks may share a step, so the lane's
+    # utilization is tracked separately: `chunk_steps` counts steps that
+    # carried prompt work, `chunk_lane_tokens` the lane capacity those
+    # steps paid for (steps x compiled chunk width), `packed_segments` the
+    # chunks that shared their step with at least one other request's, and
+    # `decode_only_steps` the steps that skipped the chunk lane entirely
+    # via the compiled decode-only fast path.
     prefill_chunks: int = 0
     chunk_tokens_committed: int = 0
+    chunk_steps: int = 0
+    chunk_lane_tokens: int = 0
+    packed_segments: int = 0
+    decode_only_steps: int = 0
     # device-compute time (always wall-clock, even under a virtual engine
     # clock) — comparable with FixedBatchEngine's prefill_s/decode_s split.
     # One unified program serves both lanes, so a mixed step's time goes to
@@ -83,11 +94,30 @@ class ServeMetrics:
         self.tokens_out += n_tokens
         self.latencies_s.append(latency_s)
 
-    def record_chunk(self, n_tokens: int) -> None:
-        """One unified step carried a prefill chunk of `n_tokens` prompt
-        tokens (committed to the paged pool in-program)."""
-        self.prefill_chunks += 1
-        self.chunk_tokens_committed += n_tokens
+    def record_chunk_step(self, seg_tokens: List[int], lane_width: int) -> None:
+        """One unified step carried a packed chunk of `len(seg_tokens)`
+        prompt segments (their token counts; committed to the paged pool
+        in-program) through a `lane_width`-token compiled lane."""
+        self.chunk_steps += 1
+        self.chunk_lane_tokens += lane_width
+        self.prefill_chunks += len(seg_tokens)
+        self.chunk_tokens_committed += sum(seg_tokens)
+        if len(seg_tokens) > 1:
+            self.packed_segments += len(seg_tokens)
+
+    def record_decode_only_step(self) -> None:
+        """One engine step ran the compiled decode-only fast path (no
+        prompt work pending — the chunk lane's cost was skipped, not
+        masked)."""
+        self.decode_only_steps += 1
+
+    def chunk_fill_frac(self) -> float:
+        """Mean utilization of the chunk lane over the steps that ran it:
+        committed prompt tokens / lane capacity paid for.  1.0 means every
+        token of every chunk step's budget did useful prompt work."""
+        if self.chunk_lane_tokens <= 0:
+            return 0.0
+        return self.chunk_tokens_committed / self.chunk_lane_tokens
 
     def record_preemption(self, nbytes: int) -> None:
         self.preemptions += 1
@@ -123,6 +153,10 @@ class ServeMetrics:
             "prefills": float(self.prefills),
             "prefill_chunks": float(self.prefill_chunks),
             "chunk_tokens_committed": float(self.chunk_tokens_committed),
+            "chunk_steps": float(self.chunk_steps),
+            "chunk_fill_frac": self.chunk_fill_frac(),
+            "packed_segments": float(self.packed_segments),
+            "decode_only_steps": float(self.decode_only_steps),
             "prefill_time_s": self.prefill_time_s,
             "decode_time_s": self.decode_time_s,
             "swap_in_time_s": self.swap_in_time_s,

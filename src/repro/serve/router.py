@@ -21,9 +21,11 @@ whole-prompt shape family; the unified runtime executes prompts through
 `block_q` and whose matmuls are tuned at the chunk's (1, chunk_tokens, d)
 shape.)  `PlanRouter` then answers the runtime's dispatch questions
 ("which attention backend for decode?", "which matmul config for the
-chunk?") by stage-qualified lookup into that plan, with `prefill_chunk`
-falling back to the `prefill` stage's choice on plans tuned before the
-stage existed.  `matmul_table(stage)` bundles every stage matmul's
+chunk?", "how many segments may pack into one chunk?") by stage-qualified
+lookup into that plan, with `prefill_chunk` falling back to the `prefill`
+stage's choice on plans tuned before the stage existed — and to
+single-segment packing on plans tuned before the segmented kernel existed
+(`chunk_segments`).  `matmul_table(stage)` bundles every stage matmul's
 (backend, config) into the dispatch table
 `kernels.dispatch.matmul_dispatch` installs around the jitted serve
 programs.
@@ -42,6 +44,13 @@ from repro.core.search.tuner import Tuner
 
 STAGES = ("prefill", "decode", "prefill_chunk")
 
+# The unified step's default per-step prompt-token budget.  This is THE
+# canonical constant: `RuntimeConfig.chunk_tokens` defaults to it and
+# `build_serve_graph` falls back to it when no explicit width is passed, so
+# an untuned plan and a default engine can never drift onto different chunk
+# shapes.
+DEFAULT_CHUNK_TOKENS = 32
+
 
 def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
                       max_seq: int, chunk_tokens: Optional[int] = None,
@@ -57,9 +66,10 @@ def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
     (32), matching an engine built with a default RuntimeConfig."""
     g = Graph("serve")
     d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    # mirror RuntimeConfig.chunk_tokens' dataclass default so an untuned
-    # call still tunes the chunk lane at the default engine's shape
-    ct = min(chunk_tokens or 32, max_seq)
+    # RuntimeConfig.chunk_tokens defaults to the same shared constant, so
+    # an untuned call still tunes the chunk lane at the default engine's
+    # shape — the two can't drift.
+    ct = min(chunk_tokens or DEFAULT_CHUNK_TOKENS, max_seq)
 
     # ---- prefill stage: one request, `prefill_len` query tokens
     xp = g.add_input("x_prefill", (1, prefill_len, d), dtype)
@@ -169,6 +179,29 @@ class PlanRouter:
         if c is None or c.backend == "xla":
             return "xla", {}
         return "pallas_attention", dict(c.config)
+
+    def chunk_segments(self, default: int = 1) -> int:
+        """Packing width of the prefill lane: how many requests' prompt
+        segments one step's chunk may carry.
+
+        The segmented kernel's grid is block_q x max-segments, and
+        `max_segments` is a tunable of the `prefill_chunk` stage's
+        attention template — a plan that raced it returns the tuned value
+        here.  PALLAS configs tuned BEFORE the segmented kernel existed
+        (no `max_segments` key) fall back to single-segment behaviour:
+        their block_q was only ever raced on the one-request grid.  An XLA
+        choice — whatever the plan's age — and the no-plan case both defer
+        to the engine's own default: the XLA gather lane computes an
+        identical per-row program at every packing width, so there is no
+        tuned grid to protect and nothing to cap."""
+        if self.plan is None:
+            return max(1, default)
+        c = self._lookup("prefill_chunk", "attention")
+        if c is None or c.backend == "xla":
+            return max(1, default)
+        if "max_segments" in c.config:
+            return max(1, int(c.config["max_segments"]))
+        return 1
 
     def matmul_config(self, stage: str,
                       which: str = "qkv_proj") -> Tuple[str, Dict[str, Any]]:

@@ -6,12 +6,14 @@ Request lifecycle under the UNIFIED TOKEN-BUDGET STEP:
                 PROMPT fits the free pool — not prompt+budget; admission
                 itself runs no program]
              -> chunked prefill: each engine step packs up to
-                `chunk_tokens` of pending prompt work — a slice of ONE
-                request's prompt, oldest admission first — into the step's
-                prefill lane, committing its KV into the paged pool
-                in-program, chunk by chunk, while the decode lane advances
-                EVERY in-flight request in the same compiled program (a
-                long prompt never stalls the decode batch)
+                `chunk_tokens` of pending prompt work — prompt SEGMENTS
+                from up to `chunk_segments` requests, oldest admission
+                first, greedy fill — into the step's prefill lane,
+                committing each segment's KV into its own request's paged
+                blocks in-program, chunk by chunk, while the decode lane
+                advances EVERY in-flight request in the same compiled
+                program (a long prompt never stalls the decode batch, and
+                short prompts no longer waste the budget's tail)
              -> the chunk that completes the prompt also samples the first
                 token (TTFT spans all of the prompt's chunks)
              -> joins the decode batch the NEXT step; greedy decode, one
@@ -20,12 +22,16 @@ Request lifecycle under the UNIFIED TOKEN-BUDGET STEP:
                 crossed); retiring on eos/max_new -> blocks + slot freed,
                 metrics recorded.
 
-One engine step = ONE invocation of one jitted program (`jit_unified_step`)
-whose shapes are static in (slots, pool blocks, table width, chunk budget):
-admission, chunk progress, retirement, preemption and resume are all pure
-data updates.  The program compiles exactly once — the power-of-two
-prefill-bucket ladder of the old two-program runtime is gone entirely, and
-with it every admission-time compile.
+One engine step = ONE invocation of one of exactly TWO jitted programs:
+`jit_unified_step` (packed prefill lane + decode lane) when prompt work is
+pending, `jit_decode_only_step` (the decode lane alone) when none is — the
+unified program's chunk lane executes at its compiled width even when
+idle, so chunk-less steps skip it entirely instead of masking it.  Both
+programs' shapes are static in (slots, pool blocks, table width, chunk
+budget, segment slots): admission, chunk packing, retirement, preemption
+and resume are all pure data updates.  Each program compiles exactly once
+— the power-of-two prefill-bucket ladder of the old two-program runtime is
+gone entirely, and with it every admission-time compile.
 
 Under pool pressure the grow path preempts: when a request cannot extend,
 the scheduler's victim (LIFO by admission, preferring the most remaining
@@ -45,10 +51,15 @@ Key properties the fixed-batch `ServeEngine` lacks:
     ceil(200/chunk_tokens) budgeted chunks, each sharing its step with the
     whole decode batch, instead of a dedicated B=1 prefill program that
     stalls everyone (head-of-line interference);
+  * short prompts are PACKED: one step's chunk carries segments from up to
+    `chunk_segments` requests (greedy fill, oldest admission first), so a
+    burst of small prompts fills the budget the head request leaves idle
+    instead of spending one step each;
   * no cross-request padding: per-slot lengths/block-tables mean a 12-token
     prompt next to a 200-token prompt costs 12 tokens of KV;
-  * ONE compiled program serves every step (static slot/pool/chunk
-    shapes); admission compiles nothing, ever;
+  * exactly TWO compiled programs serve every step (static slot/pool/chunk
+    shapes; the decode-only variant skips the idle chunk lane); admission
+    compiles nothing, ever;
   * the tuned `InferencePlan` drives dispatch: the decode and chunked-
     prefill attention backends AND every stage matmul (qkv_proj / mlp_up /
     mlp_down / lm_head) are chosen separately by `PlanRouter` from a
@@ -73,12 +84,13 @@ import numpy as np
 from repro.distributed.sharding import ShardingRules, prune_for_mesh
 from repro.launch.steps import (
     jit_commit_prefill,
+    jit_decode_only_step,
     jit_unified_step,
     paged_pool_sharding,
 )
 from repro.serve.kvcache import NULL_BLOCK, KVCacheConfig, PagedKVCache
 from repro.serve.metrics import ServeMetrics
-from repro.serve.router import PlanRouter
+from repro.serve.router import DEFAULT_CHUNK_TOKENS, PlanRouter
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
 
@@ -94,12 +106,24 @@ class RuntimeConfig:
     # lane's width).  None = max_seq: any admissible prompt prefills in one
     # chunk (the "unchunked" configuration — identical token streams, just
     # no slicing).  Smaller budgets slice long prompts across steps so the
-    # decode batch keeps streaming.  NOTE the lane's width is baked into
-    # the one compiled program, so even chunk-less decode steps execute a
-    # chunk_tokens-wide dummy forward — the budget prices EVERY step, and
-    # None makes that idle lane max_seq wide.  Keep it modest (a few x the
-    # slot count); see README "chunk-budget tuning".
-    chunk_tokens: Optional[int] = 32
+    # decode batch keeps streaming.  The lane's width is baked into the
+    # unified program, so every step that carries ANY prompt work executes
+    # the full width — but chunk-less steps dispatch the compiled
+    # decode-only program and skip the lane entirely, and segment packing
+    # fills the width with several short prompts at once, so the budget is
+    # only ever paid when (and as fully as) prompt work exists.  The
+    # default is the shared `router.DEFAULT_CHUNK_TOKENS` so the engine
+    # and an untuned serve plan can't drift onto different chunk shapes.
+    chunk_tokens: Optional[int] = DEFAULT_CHUNK_TOKENS
+    # prompt segments one step's chunk may pack.  Greedy fill means a step
+    # carries min(chunk_segments, prefilling requests) segments; 1 restores
+    # the single-request chunk lane.  A tuned plan may narrow this via its
+    # prefill_chunk stage's `max_segments` choice (old Pallas plans, tuned
+    # before the segmented kernel, narrow it to 1 — see
+    # PlanRouter.chunk_segments); the narrowed value is the segmented
+    # kernel's compiled descriptor height, so the tuned knob sizes the
+    # block_q x max-segments grid itself.
+    chunk_segments: int = 4
     interpret: bool = True            # False: compile Pallas lanes on real TPU
 
     @property
@@ -148,17 +172,31 @@ class ContinuousEngine:
         self.metrics = ServeMetrics()
         self._rid = 0
         self._done: List[ServeRequest] = []
-        # fixed prefill-lane width: the step's prompt-token budget
+        # fixed prefill-lane geometry: the step's prompt-token budget and
+        # the packed-segment descriptor height, both compiled in.  The
+        # height is the EFFECTIVE packing width — cfg.chunk_segments
+        # narrowed by the plan's tuned `max_segments` (old Pallas plans,
+        # tuned before the segmented kernel existed, narrow it to 1) — so
+        # the segmented kernel's grid is exactly as tall as the packing
+        # the scheduler will actually do: the tuned knob sizes the grid,
+        # it doesn't just throttle host-side packing under a wider one.
         self._chunk_width = cfg.chunk_width
+        self._chunk_segments = max(1, min(
+            cfg.chunk_segments,
+            self.router.chunk_segments(default=cfg.chunk_segments)))
         # per-slot host state (decode lane; prefilling slots stay zeroed so
         # their dummy decode row writes to the null sink)
         self._lengths = np.zeros((cfg.max_slots,), np.int32)
         self._last_tok = np.zeros((cfg.max_slots,), np.int32)
-        # THE compiled program: one unified step carrying the decode batch
-        # plus one prompt chunk.  Attention backends and per-stage matmul
-        # lane tables come from the plan's stage choices (decode + the new
-        # prefill_chunk stage), closed over at trace time — dispatch never
-        # recompiles mid-serve, and admission compiles nothing at all.
+        # THE two compiled step programs: the unified step carrying the
+        # decode batch plus one packed prompt chunk, and the decode-only
+        # fast path for steps with no prompt work (the unified program's
+        # chunk lane executes at its compiled width even when idle, so
+        # skipping it is a dispatch decision, not a mask).  Attention
+        # backends and per-stage matmul lane tables come from the plan's
+        # stage choices (decode + the prefill_chunk stage), closed over at
+        # trace time — dispatch never recompiles mid-serve, and admission
+        # compiles nothing at all.
         decode_backend, _ = self.router.attention_backend("decode")
         chunk_backend, chunk_config = self.router.attention_backend(
             "prefill_chunk")
@@ -169,6 +207,11 @@ class ContinuousEngine:
             chunk_attn_config=chunk_config,
             decode_matmul_table=self.router.matmul_table("decode"),
             chunk_matmul_table=self.router.matmul_table("prefill_chunk"),
+            interpret=cfg.interpret)
+        self._decode_only = jit_decode_only_step(
+            model, mesh, rules,
+            decode_attn_backend=decode_backend,
+            decode_matmul_table=self.router.matmul_table("decode"),
             interpret=cfg.interpret)
         # resume-only commit (swap-in scatter); single full-width shape
         self._commit = jit_commit_prefill(model, mesh, rules)
@@ -296,30 +339,40 @@ class ContinuousEngine:
         self._done.append(req)
 
     # ----------------------------------------------------------- unified step
-    def _chunk_inputs(self, chunk: Optional[Tuple[ServeRequest, int, int]]):
-        """Host-side prefill-lane arrays: the chunk's prompt slice (fixed
-        `_chunk_width`, zero-padded) and its block table; an idle lane is
-        all padding with an all-null table (rows divert to the sink)."""
+    def _chunk_inputs(self, chunks: List[Tuple[ServeRequest, int, int]]):
+        """Host-side prefill-lane arrays for a packed chunk: the segments'
+        prompt slices concatenated from row 0 (fixed `_chunk_width`,
+        zero-padded), each segment's block table, and the (S, 3) descriptor
+        array [row_offset, seg_len, kv_start].  Idle segment slots carry
+        seg_len 0 with an all-null table (their row_offset sits at the fill
+        level so offsets stay monotone; padding rows divert to the sink)."""
         c = self._chunk_width
+        ns = self._chunk_segments
         toks = np.zeros((1, c), np.int32)
-        table = np.full((1, self.kv_cfg.max_blocks_per_seq),
-                        NULL_BLOCK, np.int32)
-        start = 0
-        n = 0
-        if chunk is not None:
-            req, start, n = chunk
-            toks[0, :n] = req.prompt[start:start + n]
+        tables = np.full((ns, self.kv_cfg.max_blocks_per_seq),
+                         NULL_BLOCK, np.int32)
+        info = np.zeros((ns, 3), np.int32)
+        q0 = 0
+        for i, (req, start, n) in enumerate(chunks):
+            toks[0, q0:q0 + n] = req.prompt[start:start + n]
             held = self.cache.alloc.tables[req.rid]
-            table[0, :len(held)] = held
-        return toks, table, start, n
+            tables[i, :len(held)] = held
+            info[i] = (q0, n, start)
+            q0 += n
+        info[len(chunks):, 0] = q0            # idle slots: empty span at fill
+        return toks, tables, info
 
     def step(self) -> bool:
-        """One engine step = one unified-program invocation: admit (resumes
-        swap back in; fresh arrivals just take a slot), pick the step's
-        prefill chunk (token-budget accounting), grow every *decoding*
-        request's block table to cover its next token (preempting victims
-        if the pool is dry), then run the chunk lane + the decode lane as
-        ONE program.  Returns False when nothing ran."""
+        """One engine step = one invocation of one of the TWO compiled step
+        programs: admit (resumes swap back in; fresh arrivals just take a
+        slot), pack the step's prefill chunk (token-budget accounting,
+        greedy fill over up to `chunk_segments` requests), grow every
+        *decoding* request's block table to cover its next token
+        (preempting victims if the pool is dry), then run either the
+        unified program (packed chunk lane + decode lane) or — when no
+        prompt work is pending — the decode-only fast path, which skips
+        the idle chunk-wide forward entirely.  Returns False when nothing
+        ran."""
         now = self.now_fn()
         admitted = self.scheduler.admit(now)
         for req in admitted:
@@ -328,22 +381,23 @@ class ContinuousEngine:
             # fresh admissions run nothing here: their prompts stream
             # through the unified step's chunk lane, starting this step
 
-        chunk = self.scheduler.next_chunk(self._chunk_width)
+        chunks = self.scheduler.next_chunks(self._chunk_width,
+                                            self._chunk_segments)
 
         # on-demand growth for the decode batch: every decoding request
         # secures the block its next write lands in.  A request preempted
         # as some later grower's victim drops out of this step (slot is
-        # None by then) — including, possibly, the chunk's request.
+        # None by then) — including, possibly, any of the packed segments'
+        # requests.
         for req in [r for r in self.scheduler.slots
                     if r is not None and not r.prefilling]:
             if req.slot is not None:
                 self._ensure_blocks(req)
-        if chunk is not None and chunk[0].slot is None:
-            chunk = None                      # chunk request was evicted
+        chunks = [ch for ch in chunks if ch[0].slot is not None]
 
         decoding = [r for r in self.scheduler.slots
                     if r is not None and not r.prefilling]
-        if not decoding and chunk is None:
+        if not decoding and not chunks:
             return bool(admitted)
 
         # decode lane inputs: prefilling slots are masked exactly like empty
@@ -353,40 +407,50 @@ class ContinuousEngine:
         bt = jnp.asarray(self.cache.table_array(dec_rids))
         lengths = jnp.asarray(self._lengths)
         tokens = jnp.asarray(self._last_tok[:, None])
-        ch_toks, ch_table, ch_start, ch_len = self._chunk_inputs(chunk)
 
         t0 = time.perf_counter()
-        nxt_dev, ch_next_dev, self.cache.k, self.cache.v = self._unified(
-            self.params, self.cache.k, self.cache.v, bt, lengths, tokens,
-            jnp.asarray(ch_toks), jnp.asarray(ch_table),
-            jnp.asarray(ch_start, jnp.int32), jnp.asarray(ch_len, jnp.int32))
+        if chunks:
+            ch_toks, seg_tables, seg_info = self._chunk_inputs(chunks)
+            nxt_dev, seg_next_dev, self.cache.k, self.cache.v = self._unified(
+                self.params, self.cache.k, self.cache.v, bt, lengths, tokens,
+                jnp.asarray(ch_toks), jnp.asarray(seg_tables),
+                jnp.asarray(seg_info))
+        else:
+            # decode-only fast path: no prompt work pending, so the step
+            # skips the chunk-wide forward instead of masking it
+            nxt_dev, self.cache.k, self.cache.v = self._decode_only(
+                self.params, self.cache.k, self.cache.v, bt, lengths, tokens)
         nxt = np.asarray(nxt_dev, np.int32)
         step_s = time.perf_counter() - t0
-        # one program serves both lanes; attribute chunk-only steps to
-        # prefill time, everything else to decode time
+        # attribute chunk-only steps to prefill time, everything else to
+        # decode time
         if decoding:
             self.metrics.decode_time_s += step_s
         else:
             self.metrics.prefill_time_s += step_s
 
         now = self.now_fn()
-        if chunk is not None:
-            req, start, n = chunk
-            req.prefilled = start + n
-            self.metrics.record_chunk(n)
-            if not req.prefilling:            # this chunk finished the prompt
-                first = int(ch_next_dev)
-                req.output.append(first)
-                req.first_token_time = now
-                self.metrics.record_first_token(now - req.arrival_time)
-                self.metrics.prefills += 1
-                slot = req.slot
-                self._lengths[slot] = req.prompt_len
-                self._last_tok[slot] = first
-                if self._finished(req):
-                    self.scheduler.retire(req, now)
-                    self._reset_slot(slot)
-                    self._complete(req)
+        if chunks:
+            self.metrics.record_chunk_step([n for _, _, n in chunks],
+                                           self._chunk_width)
+            seg_next = np.asarray(seg_next_dev, np.int32)
+            for i, (req, start, n) in enumerate(chunks):
+                req.prefilled = start + n
+                if not req.prefilling:        # this chunk finished the prompt
+                    first = int(seg_next[i])
+                    req.output.append(first)
+                    req.first_token_time = now
+                    self.metrics.record_first_token(now - req.arrival_time)
+                    self.metrics.prefills += 1
+                    slot = req.slot
+                    self._lengths[slot] = req.prompt_len
+                    self._last_tok[slot] = first
+                    if self._finished(req):
+                        self.scheduler.retire(req, now)
+                        self._reset_slot(slot)
+                        self._complete(req)
+        elif decoding:
+            self.metrics.record_decode_only_step()
 
         if decoding:
             self.metrics.record_step(len(decoding), self.cfg.max_slots,

@@ -10,11 +10,13 @@ row of that batch.  Each engine step the scheduler:
      *prompt* (not prompt+budget): KV grows on demand during decode
      (`BlockAllocator.extend`, one block at a time), so admission reserves
      only what prefill will actually write,
-  3. picks the step's prefill *chunk* (`next_chunk`): alongside the slot
+  3. picks the step's prefill *chunk* (`next_chunks`): alongside the slot
      accounting sits chunk accounting — each admitted request remembers how
      much of its prompt is committed (`ServeRequest.prefilled`) and the
-     oldest admission with pending prompt work receives up to the engine's
-     `chunk_tokens` budget this step.  Admission itself is therefore free
+     engine's `chunk_tokens` budget is greedily PACKED, oldest admission
+     first, with prompt segments from up to `max_segments` requests per
+     step (short prompts no longer leave the tail of the budget idle).
+     Admission itself is therefore free
      (no prefill program runs at admission; the prompt is streamed through
      the unified step), and a request only joins the decode batch once its
      prompt is fully committed.
@@ -210,26 +212,39 @@ class ContinuousScheduler:
             admitted.append(req)
         return admitted
 
-    def next_chunk(self, budget: int) -> Optional[tuple]:
-        """Pick this step's prefill chunk: the oldest-admitted request with
-        uncommitted prompt tokens gets min(budget, remaining) of them.
+    def next_chunks(self, budget: int, max_segments: int = 1) -> List[tuple]:
+        """Pick this step's prefill chunk as a PACKED list of segments:
+        requests with uncommitted prompt tokens, oldest admission first
+        (ties: lowest rid), greedily fill the budget — each takes
+        min(remaining budget, remaining prompt), so the head request may
+        split mid-prompt exactly as before and the tail segment may too
+        (the split point just becomes that request's next chunk start).
 
-        Returns (request, start, n_tokens) or None when no prompt work is
-        pending.  Head-of-line by admission time (ties: lowest rid): a
-        prompt is streamed to completion before a later admission's prompt
-        starts, so TTFT ordering follows admission ordering.  The budget is
-        the unified step's `chunk_tokens` — the token-budget counterpart of
-        slot accounting: slots bound *who* is resident, the chunk budget
-        bounds how much *prompt* work any single step may carry, which is
-        what keeps a long prompt from stalling the decode batch."""
-        if budget < 1:
-            return None
-        cands = [r for r in self.slots if r is not None and r.prefilling]
-        if not cands:
-            return None
-        req = min(cands, key=lambda r: (r.admitted_time, r.rid))
-        n = min(budget, req.prompt_len - req.prefilled)
-        return req, req.prefilled, n
+        Returns up to `max_segments` tuples (request, start, n_tokens);
+        empty when no prompt work is pending.  Head-of-line by admission
+        time: an older prompt always receives budget before a younger one,
+        so TTFT ordering follows admission ordering, while younger prompts
+        may ride along in whatever budget the head leaves idle — that
+        left-over budget is exactly what single-segment chunking wasted
+        (the compiled chunk lane executes at full width regardless of
+        fill).  The budget is the unified step's `chunk_tokens` — the
+        token-budget counterpart of slot accounting: slots bound *who* is
+        resident, the chunk budget bounds how much *prompt* work any
+        single step may carry, which is what keeps prompt work from
+        stalling the decode batch."""
+        if budget < 1 or max_segments < 1:
+            return []
+        cands = sorted([r for r in self.slots
+                        if r is not None and r.prefilling],
+                       key=lambda r: (r.admitted_time, r.rid))
+        out: List[tuple] = []
+        for req in cands:
+            if budget < 1 or len(out) >= max_segments:
+                break
+            n = min(budget, req.prompt_len - req.prefilled)
+            out.append((req, req.prefilled, n))
+            budget -= n
+        return out
 
     def victim_for_preemption(
             self, exclude_rid: int) -> Optional[ServeRequest]:
