@@ -63,6 +63,15 @@ this CPU container the Pallas lanes execute in interpret mode, so their
 tokens/s is NOT a TPU performance statement — the section demonstrates
 observable plan-driven dispatch and measures the xla-vs-tuned delta.
 
+`--trace out.json` additionally records the headline continuous run's
+structured event trace (repro.serve.trace): the file is Chrome-trace JSON
+(drop it on ui.perfetto.dev for one timeline track per request plus
+scheduler/pool tracks), the raw events ride along under the "reproServe"
+key, the run's ServeMetrics are cross-validated against the events by
+repro.serve.traceview (non-zero exit on any violation), and the report
+gains a per-request time-attribution table (queued / prefill / stall /
+decode fractions of each request's life).
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--requests 32]
 """
 
@@ -89,9 +98,12 @@ from repro.serve import (
     PlanRouter,
     RuntimeConfig,
     ServeConfig,
+    TraceRecorder,
     build_serve_plan,
     percentile,
+    write_trace,
 )
+from repro.serve import traceview
 
 
 def make_workload(rng: np.random.Generator, n: int, vocab: int, rate_hz: float,
@@ -471,7 +483,8 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           lanes: bool = True, lane_requests: int = 12,
           pressure: bool = True, interference: bool = True,
           interference_requests: int = 24, packing: bool = True,
-          packing_requests: int = 24) -> dict:
+          packing_requests: int = 24,
+          trace_path: str = None) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
     model = build_model(cfg)
@@ -484,7 +497,9 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
     rcfg = RuntimeConfig(max_slots=slots, block_size=16,
                          max_blocks_per_seq=-(-(prompt_hi + new_hi) // 16),
                          max_new_tokens=new_hi)
-    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg)
+    recorder = TraceRecorder() if trace_path else None
+    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg,
+                              trace=recorder)
 
     # Warm-up: compile THE unified step program (mixed lengths only warm
     # the host paths — chunk geometry is data, nothing else ever compiles).
@@ -515,6 +530,9 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
     workload = make_workload(rng, requests, cfg.vocab, rate_hz,
                              prompt_hi=prompt_hi, new_hi=new_hi)
 
+    if recorder is not None:
+        recorder.clear()      # drop warm-up/capacity events: the trace (and
+        #                       its audit) covers exactly the headline replay
     cont = drive_continuous(engine, workload)
     fixed = drive_fixed(
         model, params, mesh,
@@ -538,6 +556,26 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
               f"(target >= 1.3x at equal-or-better p95: "
               f"{'PASS' if speedup >= 1.3 and cont['latency_p95_s'] <= fixed['latency_p95_s'] else 'MISS'})")
     out = {"fixed": fixed, "continuous": cont, "speedup": speedup}
+    if recorder is not None:
+        metadata = {
+            "usable_blocks": engine.kv_cfg.num_blocks - 1,
+            "block_size": engine.kv_cfg.block_size,
+            "max_slots": rcfg.max_slots,
+            "chunk_width": engine._chunk_width,
+            "chunk_segments": engine._chunk_segments,
+            "requests": requests, "seed": seed,
+        }
+        write_trace(trace_path, recorder.events, metrics=engine.metrics,
+                    metadata=metadata)
+        report = traceview.audit(recorder.events, metrics=engine.metrics,
+                                 metadata=metadata)
+        out["trace_audit_ok"] = report.ok
+        if verbose:
+            print(f"--- trace: {len(recorder.events)} events -> {trace_path} "
+                  "(Chrome trace-event JSON; open in ui.perfetto.dev) ---")
+            print("per-request time attribution (from trace events):")
+            print(traceview.format_attribution(report.lifecycles))
+            print(report.summary())
     if packing:
         if verbose:
             print("--- segment-packing sweep (short-prompt-heavy Poisson "
@@ -567,43 +605,96 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
     return out
 
 
+# -------------------------------------------------------------- CSV schema
+# The harness CSV contract (benchmarks/run.py prints `name,us_per_call,
+# derived`).  Rows used to be ad-hoc tuples appended in run(); the schema —
+# column count/types AND the exact row names run() emits — is now pinned so
+# dashboard/trajectory parsers can't silently break when rows are added.
+# Extending the bench means extending `expected_csv_names()` AND its
+# snapshot test (tests/test_trace.py) in the same change.
+CSV_COLUMNS = ("name", "value", "derived")
+
+PACKING_LABELS = ("packed", "single-seg")
+INTERFERENCE_LABELS = ("chunked", "unchunked")
+PRESSURE_FACTORS = (1.0, 0.5, 0.25)
+LANE_LABELS = ("xla-only", "tuned plan", "forced pallas")
+
+
+def csv_row(name: str, value, derived: str = "") -> tuple:
+    """Build one schema-conforming CSV row: (str name, float value,
+    str derived).  Loud on drift — a non-numeric value or empty name is a
+    bug in the bench, not a formatting detail for the parser to absorb."""
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"CSV row name must be a non-empty str: {name!r}")
+    return (name, float(value), str(derived))
+
+
+def expected_csv_names(packing: bool = True, interference: bool = True,
+                       pressure: bool = True, lanes: bool = True) -> list:
+    """The exact, ordered row names run() appends — the pinned schema."""
+    names = ["serve_fixed_tok_s", "serve_continuous_tok_s",
+             "serve_speedup_x", "serve_chunk_fill_frac"]
+    if packing:
+        names += [f"serve_packing_{l.replace('-', '_')}_tok_s"
+                  for l in PACKING_LABELS]
+    if interference:
+        names += [f"serve_interference_{l}_decode_tbt_p95_s"
+                  for l in INTERFERENCE_LABELS]
+    if pressure:
+        names += [f"serve_pool_{f:.2f}x_tok_s" for f in PRESSURE_FACTORS]
+    if lanes:
+        names += [f"serve_lane_{l.replace(' ', '_')}_tok_s"
+                  for l in LANE_LABELS]
+    return names
+
+
 def run(csv_rows):
     """benchmarks.run harness entry."""
     r = bench(requests=24, slots=4, verbose=False, lane_requests=8)
-    csv_rows.append(("serve_fixed_tok_s", r["fixed"]["tokens_per_s"], ""))
-    csv_rows.append(("serve_continuous_tok_s", r["continuous"]["tokens_per_s"],
-                     f"p95={r['continuous']['latency_p95_s']:.2f}s"))
-    csv_rows.append(("serve_speedup_x", r["speedup"],
-                     "continuous vs fixed, same Poisson workload"))
-    csv_rows.append(("serve_chunk_fill_frac",
-                     r["continuous"]["chunk_fill_frac"],
-                     f"packed_segments={r['continuous']['packed_segments']} "
-                     f"decode_only_steps="
-                     f"{r['continuous']['decode_only_steps']}"))
+    start = len(csv_rows)
+    csv_rows.append(csv_row("serve_fixed_tok_s",
+                            r["fixed"]["tokens_per_s"]))
+    csv_rows.append(csv_row("serve_continuous_tok_s",
+                            r["continuous"]["tokens_per_s"],
+                            f"p95={r['continuous']['latency_p95_s']:.2f}s"))
+    csv_rows.append(csv_row("serve_speedup_x", r["speedup"],
+                            "continuous vs fixed, same Poisson workload"))
+    csv_rows.append(csv_row("serve_chunk_fill_frac",
+                            r["continuous"]["chunk_fill_frac"],
+                            f"packed_segments="
+                            f"{r['continuous']['packed_segments']} "
+                            f"decode_only_steps="
+                            f"{r['continuous']['decode_only_steps']}"))
     for label, pr in r.get("packing", {}).items():
-        csv_rows.append((f"serve_packing_{label.replace('-', '_')}_tok_s",
-                         pr["tokens_per_s"],
-                         f"ttft_p95={pr['ttft_p95_s']:.2f} "
-                         f"fill={pr['chunk_fill_frac']:.2f} "
-                         f"packed_segments={pr['packed_segments']} "
-                         f"decode_only={pr['decode_only_steps']} "
-                         f"virtual-clock"))
+        csv_rows.append(csv_row(
+            f"serve_packing_{label.replace('-', '_')}_tok_s",
+            pr["tokens_per_s"],
+            f"ttft_p95={pr['ttft_p95_s']:.2f} "
+            f"fill={pr['chunk_fill_frac']:.2f} "
+            f"packed_segments={pr['packed_segments']} "
+            f"decode_only={pr['decode_only_steps']} virtual-clock"))
     for label, ir in r.get("interference", {}).items():
-        csv_rows.append((f"serve_interference_{label}_decode_tbt_p95_s",
-                         ir["decode_tbt_p95_s"],
-                         f"tbt_max={ir['decode_tbt_max_s']:.2f} "
-                         f"long_ttft_p95={ir['long_ttft_p95_s']:.2f} "
-                         f"chunks={ir['chunks']} virtual-clock"))
+        csv_rows.append(csv_row(
+            f"serve_interference_{label}_decode_tbt_p95_s",
+            ir["decode_tbt_p95_s"],
+            f"tbt_max={ir['decode_tbt_max_s']:.2f} "
+            f"long_ttft_p95={ir['long_ttft_p95_s']:.2f} "
+            f"chunks={ir['chunks']} virtual-clock"))
     for f, pr in r.get("pressure", {}).items():
-        csv_rows.append((f"serve_pool_{f:.2f}x_tok_s", pr["tokens_per_s"],
-                         f"preemptions={pr['preemptions']} "
-                         f"swap_mb={pr['swap_mb']:.2f} "
-                         f"swap_in_s={pr['swap_in_time_s']:.3f} "
-                         f"errors={pr['errors']}"))
+        csv_rows.append(csv_row(
+            f"serve_pool_{f:.2f}x_tok_s", pr["tokens_per_s"],
+            f"preemptions={pr['preemptions']} swap_mb={pr['swap_mb']:.2f} "
+            f"swap_in_s={pr['swap_in_time_s']:.3f} errors={pr['errors']}"))
     for label, lr in r.get("lanes", {}).items():
         lanes = ",".join(f"{k}:{v}" for k, v in sorted(lr["lanes"].items()))
-        csv_rows.append((f"serve_lane_{label.replace(' ', '_')}_tok_s",
-                         lr["tokens_per_s"], lanes or "no plan (all xla)"))
+        csv_rows.append(csv_row(
+            f"serve_lane_{label.replace(' ', '_')}_tok_s",
+            lr["tokens_per_s"], lanes or "no plan (all xla)"))
+    got = [row[0] for row in csv_rows[start:]]
+    if got != expected_csv_names():
+        raise AssertionError(
+            "bench_serving CSV schema drifted from expected_csv_names(): "
+            f"{got}")
 
 
 if __name__ == "__main__":
@@ -630,6 +721,10 @@ if __name__ == "__main__":
     ap.add_argument("--require-decode-only", action="store_true",
                     help="exit non-zero unless the headline continuous run "
                          "dispatched the decode-only fast path (CI guard)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the headline continuous run's event trace "
+                         "to PATH (Chrome-trace JSON, opens in "
+                         "ui.perfetto.dev; audited against ServeMetrics)")
     args = ap.parse_args()
     result = bench(args.requests, args.slots, args.seed, args.rate,
                    lanes=not args.no_lanes, lane_requests=args.lane_requests,
@@ -637,7 +732,11 @@ if __name__ == "__main__":
                    interference=not args.no_interference,
                    interference_requests=args.interference_requests,
                    packing=not args.no_packing,
-                   packing_requests=args.packing_requests)
+                   packing_requests=args.packing_requests,
+                   trace_path=args.trace)
+    if args.trace and not result.get("trace_audit_ok", False):
+        print("trace audit: FAIL — event trace disagrees with ServeMetrics")
+        raise SystemExit(1)
     if args.require_decode_only:
         n = result["continuous"]["decode_only_steps"]
         if n == 0:

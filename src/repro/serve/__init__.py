@@ -9,6 +9,12 @@ from repro.serve.router import (
 )
 from repro.serve.runtime import ContinuousEngine, RuntimeConfig
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.trace import (
+    NULL_RECORDER,
+    TraceRecorder,
+    load_trace,
+    write_trace,
+)
 
 __all__ = [
     "BlockAllocator",
@@ -17,6 +23,7 @@ __all__ = [
     "ContinuousScheduler",
     "FixedBatchEngine",
     "KVCacheConfig",
+    "NULL_RECORDER",
     "PagedKVCache",
     "PlanRouter",
     "Request",
@@ -25,7 +32,10 @@ __all__ = [
     "ServeEngine",
     "ServeMetrics",
     "ServeRequest",
+    "TraceRecorder",
     "build_serve_graph",
     "build_serve_plan",
+    "load_trace",
     "percentile",
+    "write_trace",
 ]

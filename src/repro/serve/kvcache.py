@@ -33,6 +33,8 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.trace import NULL_RECORDER
+
 NULL_BLOCK = 0  # reserved sink block — never allocated to a request
 
 
@@ -62,6 +64,11 @@ class BlockAllocator:
         self.tables: Dict[int, List[int]] = {}
         # rid -> block count held at swap-out (no physical blocks owned)
         self.swapped: Dict[int, int] = {}
+        # structured event recorder (`repro.serve.trace`); the serving
+        # engine rebinds it, the default no-op has near-zero cost and every
+        # accounting event carries `free_after` so a trace audit can replay
+        # pool conservation event by event
+        self.trace = NULL_RECORDER
 
     # ------------------------------------------------------------ queries
     @property
@@ -91,6 +98,8 @@ class BlockAllocator:
                 f"KV pool exhausted: want {n_blocks}, free {len(self._free)}")
         blocks = [self._free.pop() for _ in range(n_blocks)]
         self.tables[rid] = blocks
+        self.trace.emit("block_alloc", rid=rid, n=n_blocks,
+                        free_after=len(self._free))
         return blocks
 
     def extend(self, rid: int, n_tokens_total: int) -> bool:
@@ -103,12 +112,16 @@ class BlockAllocator:
             return False
         for _ in range(need):
             table.append(self._free.pop())
+        self.trace.emit("block_extend", rid=rid, n=need,
+                        free_after=len(self._free))
         return True
 
     def free(self, rid: int) -> int:
         """Return all of rid's blocks to the free list."""
         blocks = self.tables.pop(rid)
         self._free.extend(reversed(blocks))
+        self.trace.emit("block_free", rid=rid, n=len(blocks),
+                        free_after=len(self._free))
         return len(blocks)
 
     # ------------------------------------------------------------- swapping
@@ -174,8 +187,11 @@ class PagedKVCache:
         k_host = np.asarray(self.k[:, ids])
         v_host = np.asarray(self.v[:, ids])
         self._swapped[rid] = (k_host, v_host)
+        nbytes = k_host.nbytes + v_host.nbytes
+        self.alloc.trace.emit("swap_out", rid=rid, nbytes=nbytes,
+                              n_blocks=len(self.alloc.tables[rid]))
         self.alloc.swap_out(rid)
-        return k_host.nbytes + v_host.nbytes
+        return nbytes
 
     def take_swapped(self, rid: int):
         """Pop rid's host-side (k, v) buffers for swap-in; the caller

@@ -34,16 +34,21 @@ class ServeMetrics:
     requests_done: int = 0
     decode_steps: int = 0
     prefills: int = 0          # prompts whose prefill completed
-    # chunked-prefill accounting: one *chunk* is one request's contiguous
-    # prompt slice committed in one step (chunks > prefills means prompts
-    # were split across steps; TTFT under chunking spans them all).  With
-    # segment packing several chunks may share a step, so the lane's
-    # utilization is tracked separately: `chunk_steps` counts steps that
-    # carried prompt work, `chunk_lane_tokens` the lane capacity those
-    # steps paid for (steps x compiled chunk width), `packed_segments` the
-    # chunks that shared their step with at least one other request's, and
-    # `decode_only_steps` the steps that skipped the chunk lane entirely
-    # via the compiled decode-only fast path.
+    # chunked-prefill accounting under the PACKED lifecycle: one *chunk* is
+    # one request's contiguous prompt slice (a segment) committed in one
+    # step, and one step may carry chunks from SEVERAL requests — so a
+    # single step can retire several prefills at once (`prefills` advances
+    # per request, when its final segment commits; TTFT spans all of that
+    # request's chunks).  prefill_chunks > prefills means at least one
+    # prompt was split across steps; prefill_chunks > chunk_steps means
+    # segments were packed.  Lane utilization is tracked separately:
+    # `chunk_steps` counts steps that carried prompt work,
+    # `chunk_lane_tokens` the lane capacity those steps paid for
+    # (steps x compiled chunk width — the lane always executes at full
+    # width), `packed_segments` the chunks that shared their step with at
+    # least one other request's, and `decode_only_steps` the steps that
+    # skipped the chunk lane entirely via the compiled decode-only fast
+    # path.
     prefill_chunks: int = 0
     chunk_tokens_committed: int = 0
     chunk_steps: int = 0
@@ -52,8 +57,10 @@ class ServeMetrics:
     decode_only_steps: int = 0
     # device-compute time (always wall-clock, even under a virtual engine
     # clock) — comparable with FixedBatchEngine's prefill_s/decode_s split.
-    # One unified program serves both lanes, so a mixed step's time goes to
-    # decode_time_s and prefill_time_s collects chunk-only steps.
+    # The unified program carries both lanes in one invocation, so a mixed
+    # step's time goes to decode_time_s; prefill_time_s collects the steps
+    # that carried ONLY chunk work (no decode rows), and decode-only fast-
+    # path steps are pure decode_time_s.
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
     # swap-in scatter time used to hide inside prefill_time_s; preemption
@@ -132,12 +139,16 @@ class ServeMetrics:
     # ------------------------------------------------------------- summary
     @property
     def wall_s(self) -> float:
+        """Elapsed engine-clock time; 0.0 while `start_time`/`end_time` are
+        unset.  (The old 1e-9 sentinel made `tokens_per_s()` absurdly huge
+        — billions of tok/s — on an engine that never ran.)"""
         if self.start_time is None or self.end_time is None:
-            return 1e-9
+            return 0.0
         return max(1e-9, self.end_time - self.start_time)
 
     def tokens_per_s(self) -> float:
-        return self.tokens_out / self.wall_s
+        w = self.wall_s
+        return self.tokens_out / w if w > 0.0 else 0.0
 
     def summary(self) -> Dict[str, float]:
         return {

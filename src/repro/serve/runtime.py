@@ -69,6 +69,16 @@ Key properties the fixed-batch `ServeEngine` lacks:
 
 The engine clock is injectable (`now_fn`) so benchmarks can replay Poisson
 arrival traces in wall time or virtual time with identical scheduling.
+
+Passing a `repro.serve.trace.TraceRecorder` as `trace=` records every
+scheduler / allocator / step decision as a typed event on the engine clock
+(admission, chunk packing, preemption and swap, block accounting, step
+dispatch with lane fill and device time, program compiles).  The recorder
+threads through the scheduler and the block allocator, exports to
+Chrome-trace-event JSON for `ui.perfetto.dev`, and feeds the trace audit
+(`repro.serve.traceview`).  Disabled — the default — every emission site
+holds the no-op recorder, so serving costs one attribute lookup per site
+and the per-token loops skip even that via the `enabled` flag.
 """
 
 from __future__ import annotations
@@ -92,6 +102,7 @@ from repro.serve.kvcache import NULL_BLOCK, KVCacheConfig, PagedKVCache
 from repro.serve.metrics import ServeMetrics
 from repro.serve.router import DEFAULT_CHUNK_TOKENS, PlanRouter
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.trace import NULL_RECORDER, TraceRecorder
 
 
 @dataclasses.dataclass
@@ -151,7 +162,8 @@ class ContinuousEngine:
 
     def __init__(self, model, params, mesh, rules: ShardingRules,
                  cfg: RuntimeConfig, router: Optional[PlanRouter] = None,
-                 now_fn: Optional[Callable[[], float]] = None):
+                 now_fn: Optional[Callable[[], float]] = None,
+                 trace: Optional[TraceRecorder] = None):
         if not hasattr(model, "decode_step_paged"):
             raise TypeError(
                 f"{type(model).__name__} has no paged decode path; use the "
@@ -163,14 +175,26 @@ class ContinuousEngine:
         self.cfg = cfg
         self.router = router or PlanRouter(None)
         self.now_fn = now_fn or time.perf_counter
+        # structured event tracing (`repro.serve.trace`): the recorder is
+        # threaded through the scheduler and the block allocator so every
+        # lifecycle / pool / step event lands in ONE stream on the ENGINE
+        # clock.  Disabled (the default) it is the no-op recorder — one
+        # attribute lookup per emission site, per-token hot loops guard on
+        # `trace.enabled` and skip even that.
+        self.trace = trace if trace is not None else NULL_RECORDER
+        if self.trace.enabled and self.trace.now_fn is None:
+            self.trace.now_fn = self.now_fn
         mcfg = model.cfg
         self.kv_cfg = cfg.kv_config()
         self.cache = PagedKVCache(self.kv_cfg, mcfg.n_layers, mcfg.n_kv_heads,
                                   mcfg.hd, jnp.dtype(mcfg.dtype))
+        self.cache.alloc.trace = self.trace
         self.scheduler = ContinuousScheduler(cfg.max_slots, self.kv_cfg,
-                                             self.cache.alloc)
+                                             self.cache.alloc,
+                                             trace=self.trace)
         self.metrics = ServeMetrics()
         self._rid = 0
+        self._step_idx = 0
         self._done: List[ServeRequest] = []
         # fixed prefill-lane geometry: the step's prompt-token budget and
         # the packed-segment descriptor height, both compiled in.  The
@@ -309,10 +333,20 @@ class ContinuousEngine:
         L = k_host.shape[0]
         ks = jnp.asarray(k_host.reshape(L, 1, nb_pad * bs, *k_host.shape[3:]))
         vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
+        if self.trace.enabled:
+            n_commit = self._commit._cache_size()
         self.cache.k, self.cache.v = self._commit(
             self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+        swap_in_s = time.perf_counter() - t0
+        if self.trace.enabled:
+            if self._commit._cache_size() > n_commit:
+                self.trace.emit("compile", program="commit",
+                                device_s=swap_in_s)
+            self.trace.emit("swap_in", rid=req.rid, nbytes=nbytes)
+            self.trace.emit("resume", rid=req.rid, stall_s=req.last_stall_s,
+                            swap_in_s=swap_in_s)
         self.metrics.record_resume(nbytes, req.last_stall_s,
-                                   swap_in_s=time.perf_counter() - t0)
+                                   swap_in_s=swap_in_s)
         slot = req.slot
         if req.prefilling:
             # not in the decode batch yet: stay masked (zeroed) until the
@@ -408,6 +442,22 @@ class ContinuousEngine:
         lengths = jnp.asarray(self._lengths)
         tokens = jnp.asarray(self._last_tok[:, None])
 
+        trace = self.trace
+        kind = "unified" if chunks else "decode_only"
+        step_idx = self._step_idx
+        self._step_idx += 1
+        if trace.enabled:
+            for req, start, n in chunks:
+                trace.emit("chunk_scheduled", t=now, rid=req.rid,
+                           start=start, n=n)
+            trace.emit("step_begin", t=now, step=step_idx, kind=kind,
+                       lane_width=self._chunk_width if chunks else 0,
+                       segments=len(chunks),
+                       chunk_tokens=sum(n for _, _, n in chunks),
+                       decode_rows=len(decoding))
+            prog = self._unified if chunks else self._decode_only
+            n_compiled = prog._cache_size()
+
         t0 = time.perf_counter()
         if chunks:
             ch_toks, seg_tables, seg_info = self._chunk_inputs(chunks)
@@ -422,6 +472,8 @@ class ContinuousEngine:
                 self.params, self.cache.k, self.cache.v, bt, lengths, tokens)
         nxt = np.asarray(nxt_dev, np.int32)
         step_s = time.perf_counter() - t0
+        if trace.enabled and prog._cache_size() > n_compiled:
+            trace.emit("compile", program=kind, device_s=step_s)
         # attribute chunk-only steps to prefill time, everything else to
         # decode time
         if decoding:
@@ -430,16 +482,26 @@ class ContinuousEngine:
             self.metrics.prefill_time_s += step_s
 
         now = self.now_fn()
+        if trace.enabled:
+            trace.emit("step_end", t=now, step=step_idx, kind=kind,
+                       lane_width=self._chunk_width if chunks else 0,
+                       segments=len(chunks),
+                       chunk_tokens=sum(n for _, _, n in chunks),
+                       decode_rows=len(decoding), device_s=step_s)
         if chunks:
             self.metrics.record_chunk_step([n for _, _, n in chunks],
                                            self._chunk_width)
             seg_next = np.asarray(seg_next_dev, np.int32)
             for i, (req, start, n) in enumerate(chunks):
                 req.prefilled = start + n
+                if trace.enabled:
+                    trace.emit("chunk_committed", t=now, rid=req.rid,
+                               start=start, n=n, prefilled=req.prefilled)
                 if not req.prefilling:        # this chunk finished the prompt
                     first = int(seg_next[i])
                     req.output.append(first)
                     req.first_token_time = now
+                    trace.emit("first_token", t=now, rid=req.rid, token=first)
                     self.metrics.record_first_token(now - req.arrival_time)
                     self.metrics.prefills += 1
                     slot = req.slot
@@ -455,11 +517,15 @@ class ContinuousEngine:
         if decoding:
             self.metrics.record_step(len(decoding), self.cfg.max_slots,
                                      self.cache.alloc.occupancy())
+            emit_tokens = trace.enabled
             for req in decoding:
                 slot = req.slot
                 req.output.append(int(nxt[slot]))
                 self._lengths[slot] += 1
                 self._last_tok[slot] = nxt[slot]
+                if emit_tokens:
+                    trace.emit("decode_token", t=now, rid=req.rid,
+                               token=int(nxt[slot]))
                 if self._finished(req):
                     self.scheduler.retire(req, now)
                     self._reset_slot(slot)

@@ -47,6 +47,7 @@ from typing import Deque, List, Optional
 import numpy as np
 
 from repro.serve.kvcache import BlockAllocator, KVCacheConfig
+from repro.serve.trace import NULL_RECORDER
 
 
 @dataclasses.dataclass
@@ -111,10 +112,13 @@ class ContinuousScheduler:
     """Admission control over `max_slots` decode slots + the block pool."""
 
     def __init__(self, max_slots: int, kv_cfg: KVCacheConfig,
-                 alloc: BlockAllocator):
+                 alloc: BlockAllocator, trace=NULL_RECORDER):
         self.max_slots = max_slots
         self.kv_cfg = kv_cfg
         self.alloc = alloc
+        # structured event recorder (`repro.serve.trace`); the engine passes
+        # its own, the default no-op costs one attribute lookup per site
+        self.trace = trace
         self.waiting: Deque[ServeRequest] = deque()
         self.resumed: Deque[ServeRequest] = deque()   # preempted, to re-admit
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
@@ -148,17 +152,19 @@ class ContinuousScheduler:
         back through a decode step, so its K/V row is never written)."""
         return req.prompt_len + req.max_new_tokens - 1
 
+    def _reject(self, req: ServeRequest, reason: str) -> None:
+        self.trace.emit("reject", rid=req.rid, reason=reason)
+        raise ValueError(f"request {req.rid}: {reason}")
+
     def submit(self, req: ServeRequest) -> None:
         if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1")
+            self._reject(req, "max_new_tokens must be >= 1")
         if req.prompt_len < 1:
-            raise ValueError(f"request {req.rid}: empty prompt")
+            self._reject(req, "empty prompt")
         if self.kv_rows(req) > self.kv_cfg.max_seq:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} + "
-                f"max_new {req.max_new_tokens} exceeds max_seq "
-                f"{self.kv_cfg.max_seq}")
+            self._reject(
+                req, f"prompt {req.prompt_len} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq {self.kv_cfg.max_seq}")
         need = self.kv_cfg.blocks_for(self.kv_rows(req))
         usable = self.kv_cfg.num_blocks - 1
         if need > usable:
@@ -167,10 +173,12 @@ class ContinuousScheduler:
             # (This guard is also what makes preemption terminate: with
             # every other request evicted, any admitted request can always
             # extend to its worst case.)
-            raise ValueError(
-                f"request {req.rid}: needs {need} KV blocks but the pool "
-                f"only has {usable}")
+            self._reject(req, f"needs {need} KV blocks but the pool only "
+                         f"has {usable}")
         self.waiting.append(req)
+        self.trace.emit("submit", rid=req.rid, arrival=req.arrival_time,
+                        prompt_len=req.prompt_len,
+                        max_new=req.max_new_tokens)
 
     def admit(self, now: float) -> List[ServeRequest]:
         """Move waiting/preempted requests into free slots; returns the
@@ -195,6 +203,7 @@ class ContinuousScheduler:
                 req.last_stall_s = now - req.preempted_time
                 req.stall_s += req.last_stall_s
                 req.preempted_time = None
+                kind = "resume"
             elif self.waiting:
                 req = self.waiting[0]
                 if req.arrival_time > now:
@@ -205,11 +214,13 @@ class ContinuousScheduler:
                 self.waiting.popleft()
                 self.alloc.allocate(req.rid, need)
                 req.admitted_time = now
+                kind = "fresh"
             else:
                 break
             req.slot = slot
             self.slots[slot] = req
             admitted.append(req)
+            self.trace.emit("admit", t=now, rid=req.rid, slot=slot, kind=kind)
         return admitted
 
     def next_chunks(self, budget: int, max_segments: int = 1) -> List[tuple]:
@@ -269,6 +280,7 @@ class ContinuousScheduler:
         chunk accounting resumes the prompt mid-stream, recomputing
         nothing."""
         assert req.slot is not None and self.slots[req.slot] is req
+        self.trace.emit("preempt", t=now, rid=req.rid, slot=req.slot)
         self.slots[req.slot] = None
         req.slot = None
         req.preemptions += 1
@@ -282,3 +294,5 @@ class ContinuousScheduler:
         assert req.slot is not None and self.slots[req.slot] is req
         self.slots[req.slot] = None
         req.slot = None
+        self.trace.emit("finish", t=now, rid=req.rid,
+                        n_output=len(req.output))

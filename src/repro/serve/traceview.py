@@ -1,0 +1,459 @@
+"""Trace audit: reconstruct per-request lifecycles from a serve event trace
+and cross-validate them against `ServeMetrics` aggregates.
+
+The differential tests pin that scheduling choices are invisible to the
+TOKENS (byte-identical greedy streams); this module pins that they are
+faithfully VISIBLE to the trace: every number `ServeMetrics` reports must be
+recomputable from the event stream alone.  Checks:
+
+  * **terminal** — every `admit`ed request reaches exactly one `finish`
+    event, preceded by exactly one `first_token`;
+  * **timing** — per-request TTFT / completion latency recomputed purely
+    from events (`first_token.t - arrival`, `finish.t - arrival`) match the
+    recorded `ServeMetrics` sample lists, and total stall time recomputed
+    from `preempt` -> resume-`admit` intervals matches `stall_s`;
+  * **tokens** — `first_token` + `decode_token` event counts reproduce
+    `tokens_out`, per-request token events match each `finish` event's
+    `n_output`, and committed `chunk_committed` tokens reproduce
+    `chunk_tokens_committed` (each request's chunks covering exactly
+    [0, prompt_len) in order);
+  * **pool** — replaying `block_alloc` / `block_extend` / `block_free`
+    against a free-block counter reproduces every event's recorded
+    `free_after`, no request's holding goes negative, and a completed run
+    returns the pool to its initial free level;
+  * **dispatch** — `step_end` events with kind `decode_only` carried zero
+    segments and zero chunk tokens, and their count matches
+    `decode_only_steps` (same for `chunk_steps` / unified);
+  * **export** — the Chrome-trace-event export is valid (JSON-serializable,
+    required keys per event).
+
+`attribution_rows` / `format_attribution` turn the lifecycles into the
+per-request time-attribution table (queued / prefill / stalled / decode
+fractions) `bench_serving.py --trace` prints.
+
+CLI (used by CI on the bench smoke's captured trace):
+
+    PYTHONPATH=src python -m repro.serve.traceview out.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serve.trace import TraceEvent, metrics_snapshot, to_chrome_trace
+
+_TOL = 1e-6
+
+
+@dataclasses.dataclass
+class Lifecycle:
+    """One request's reconstructed lifecycle, built purely from events."""
+    rid: int
+    arrival: Optional[float] = None
+    submit_t: Optional[float] = None
+    prompt_len: Optional[int] = None
+    admits: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    preempts: List[float] = dataclasses.field(default_factory=list)
+    stalls: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    n_output: Optional[int] = None
+    decode_tokens: int = 0
+    first_tokens: int = 0
+    chunks: List[Tuple[float, int, int]] = dataclasses.field(
+        default_factory=list)   # (t, start, n) per chunk_committed
+
+    # ------------------------------------------------- event-derived timing
+    @property
+    def ttft_s(self) -> float:
+        if self.first_token_t is None or self.arrival is None:
+            return math.nan
+        return self.first_token_t - self.arrival
+
+    @property
+    def latency_s(self) -> float:
+        if self.finish_t is None or self.arrival is None:
+            return math.nan
+        return self.finish_t - self.arrival
+
+    @property
+    def stall_s(self) -> float:
+        return sum(b - a for a, b in self.stalls)
+
+    @property
+    def queued_s(self) -> float:
+        if not self.admits or self.arrival is None:
+            return math.nan
+        return self.admits[0][0] - self.arrival
+
+    def _stall_split(self) -> Tuple[float, float]:
+        """(stall during prefill, stall during decode): a preemption that
+        began before the first token stalled the prompt, later ones stall
+        decoding."""
+        pre = dec = 0.0
+        for a, b in self.stalls:
+            if self.first_token_t is not None and a >= self.first_token_t:
+                dec += b - a
+            else:
+                pre += b - a
+        return pre, dec
+
+    @property
+    def prefill_s(self) -> float:
+        if self.first_token_t is None or not self.admits:
+            return math.nan
+        return self.first_token_t - self.admits[0][0] - self._stall_split()[0]
+
+    @property
+    def decode_s(self) -> float:
+        if self.finish_t is None or self.first_token_t is None:
+            return math.nan
+        return self.finish_t - self.first_token_t - self._stall_split()[1]
+
+
+def build_lifecycles(events: List[TraceEvent]) -> Dict[int, Lifecycle]:
+    """Fold the event stream into per-request lifecycles (pure function of
+    the trace; `ServeMetrics` is never consulted)."""
+    lcs: Dict[int, Lifecycle] = {}
+
+    def lc(rid: int) -> Lifecycle:
+        if rid not in lcs:
+            lcs[rid] = Lifecycle(rid)
+        return lcs[rid]
+
+    for e in events:
+        r = e.rid
+        if e.name == "submit":
+            x = lc(r)
+            x.submit_t = e.t
+            x.arrival = e.fields.get("arrival", e.t)
+            x.prompt_len = e.fields.get("prompt_len")
+        elif e.name == "admit":
+            x = lc(r)
+            x.admits.append((e.t, e.fields.get("kind", "fresh")))
+            if x.preempts and len(x.stalls) < len(x.preempts):
+                x.stalls.append((x.preempts[len(x.stalls)], e.t))
+        elif e.name == "preempt":
+            lc(r).preempts.append(e.t)
+        elif e.name == "first_token":
+            x = lc(r)
+            x.first_tokens += 1
+            if x.first_token_t is None:
+                x.first_token_t = e.t
+        elif e.name == "decode_token":
+            lc(r).decode_tokens += 1
+        elif e.name == "chunk_committed":
+            lc(r).chunks.append((e.t, e.fields.get("start", 0),
+                                 e.fields.get("n", 0)))
+        elif e.name == "finish":
+            x = lc(r)
+            x.finish_t = e.t
+            x.n_output = e.fields.get("n_output")
+    return lcs
+
+
+@dataclasses.dataclass
+class AuditReport:
+    violations: List[str]
+    lifecycles: Dict[int, Lifecycle]
+    checks: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        head = (f"trace audit: {'PASS' if self.ok else 'FAIL'} — "
+                f"{len(self.lifecycles)} requests, "
+                + ", ".join(f"{k}={v}" for k, v in sorted(self.checks.items())))
+        if self.violations:
+            head += "\n" + "\n".join(f"  VIOLATION: {v}"
+                                     for v in self.violations)
+        return head
+
+
+def _close(a: float, b: float, tol: float = _TOL) -> bool:
+    return abs(a - b) <= tol * max(1.0, abs(a), abs(b))
+
+
+def _match_samples(name: str, got: List[float], want: List[float],
+                   violations: List[str]) -> None:
+    got, want = sorted(got), sorted(want)
+    if len(got) != len(want):
+        violations.append(f"{name}: {len(got)} event-derived samples vs "
+                          f"{len(want)} recorded")
+        return
+    for g, w in zip(got, want):
+        if not _close(g, w):
+            violations.append(f"{name}: event-derived {g!r} != recorded {w!r}")
+            return
+
+
+def _audit_lifecycles(lcs: Dict[int, Lifecycle],
+                      violations: List[str]) -> None:
+    for rid, x in sorted(lcs.items()):
+        if x.submit_t is None:
+            violations.append(f"req {rid}: events without a submit")
+        if not x.admits:
+            if x.finish_t is not None:
+                violations.append(f"req {rid}: finished without an admit")
+            continue
+        if x.finish_t is None:
+            violations.append(f"req {rid}: admitted but never reached a "
+                              "terminal finish event")
+            continue
+        if x.first_tokens != 1:
+            violations.append(f"req {rid}: {x.first_tokens} first_token "
+                              "events (want exactly 1)")
+        if x.n_output is not None \
+                and x.first_tokens + x.decode_tokens != x.n_output:
+            violations.append(
+                f"req {rid}: {x.first_tokens}+{x.decode_tokens} token events "
+                f"!= finish n_output {x.n_output}")
+        if len(x.stalls) != len(x.preempts):
+            violations.append(f"req {rid}: {len(x.preempts)} preempts but "
+                              f"{len(x.stalls)} resume intervals")
+        resumes = sum(1 for _, kind in x.admits if kind == "resume")
+        if resumes != len(x.preempts):
+            violations.append(f"req {rid}: {len(x.preempts)} preempts but "
+                              f"{resumes} resume admits")
+        # chunk coverage: committed segments tile [0, prompt_len) in order
+        if x.chunks and x.prompt_len is not None:
+            pos = 0
+            for _, start, n in x.chunks:
+                if start != pos:
+                    violations.append(f"req {rid}: chunk committed at "
+                                      f"{start}, expected {pos}")
+                    break
+                pos += n
+            else:
+                if pos != x.prompt_len:
+                    violations.append(
+                        f"req {rid}: chunks committed {pos} of "
+                        f"{x.prompt_len} prompt tokens")
+
+
+def _audit_pool(events: List[TraceEvent], metadata: Dict[str, Any],
+                violations: List[str], checks: Dict[str, Any]) -> None:
+    block_events = [e for e in events if e.name in
+                    ("block_alloc", "block_extend", "block_free")]
+    if not block_events:
+        return
+    free = metadata.get("usable_blocks")
+    if free is None:
+        # infer the initial level from the first event's recorded state
+        e0 = block_events[0]
+        delta = e0.fields["n"] if e0.name == "block_free" else -e0.fields["n"]
+        free = e0.fields["free_after"] - delta
+    initial = free
+    held: Dict[int, int] = {}
+    for e in block_events:
+        n = e.fields["n"]
+        if n < 0:
+            violations.append(f"{e.name} rid {e.rid}: negative count {n}")
+            continue
+        if e.name == "block_free":
+            free += n
+            held[e.rid] = held.get(e.rid, 0) - n
+            if held[e.rid] < 0:
+                violations.append(f"req {e.rid}: freed {n} blocks beyond "
+                                  "its holding")
+        else:
+            free -= n
+            held[e.rid] = held.get(e.rid, 0) + n
+        if free < 0:
+            violations.append(f"{e.name} rid {e.rid}: free count went "
+                              f"negative ({free})")
+        if free != e.fields["free_after"]:
+            violations.append(
+                f"{e.name} rid {e.rid}: modeled free {free} != recorded "
+                f"free_after {e.fields['free_after']}")
+            free = e.fields["free_after"]   # resync to localize reports
+    leaked = {r: h for r, h in held.items() if h != 0}
+    if leaked:
+        violations.append(f"pool accounting leaked blocks at end of trace: "
+                          f"{leaked}")
+    if free != initial:
+        violations.append(f"pool free count ended at {free}, started at "
+                          f"{initial}")
+    checks["block_events"] = len(block_events)
+
+
+def _audit_steps(events: List[TraceEvent], violations: List[str],
+                 checks: Dict[str, Any]) -> Dict[str, int]:
+    begins: Dict[int, TraceEvent] = {}
+    kinds = {"unified": 0, "decode_only": 0}
+    for e in events:
+        if e.name == "step_begin":
+            if e.fields["step"] in begins:
+                violations.append(f"step {e.fields['step']}: duplicate "
+                                  "step_begin")
+            begins[e.fields["step"]] = e
+        elif e.name == "step_end":
+            b = begins.pop(e.fields["step"], None)
+            if b is None:
+                violations.append(f"step {e.fields['step']}: step_end "
+                                  "without step_begin")
+            elif b.fields.get("kind") != e.fields.get("kind"):
+                violations.append(f"step {e.fields['step']}: kind changed "
+                                  "between begin and end")
+            kind = e.fields.get("kind")
+            if kind in kinds:
+                kinds[kind] += 1
+            if kind == "decode_only" and (
+                    e.fields.get("segments", 0) != 0
+                    or e.fields.get("chunk_tokens", 0) != 0):
+                violations.append(
+                    f"step {e.fields['step']}: decode_only step carried "
+                    f"{e.fields.get('segments')} segments / "
+                    f"{e.fields.get('chunk_tokens')} chunk tokens")
+    if begins:
+        violations.append(f"{len(begins)} step_begin events never ended: "
+                          f"{sorted(begins)[:5]}")
+    checks.update(unified_steps=kinds["unified"],
+                  decode_only_steps=kinds["decode_only"])
+    return kinds
+
+
+def audit(events: List[TraceEvent], metrics=None,
+          metadata: Optional[Dict[str, Any]] = None) -> AuditReport:
+    """Audit a trace's internal invariants and (when `metrics` is given —
+    a `ServeMetrics` or its `metrics_snapshot` dict) cross-validate the
+    event-derived request timings and counters against the recorded
+    aggregates.  Assumes a COMPLETED run: every admitted request must have
+    terminated."""
+    if metrics is not None and not isinstance(metrics, dict):
+        metrics = metrics_snapshot(metrics)
+    metadata = metadata or {}
+    violations: List[str] = []
+    checks: Dict[str, Any] = {}
+
+    lcs = build_lifecycles(events)
+    _audit_lifecycles(lcs, violations)
+    _audit_pool(events, metadata, violations, checks)
+    kinds = _audit_steps(events, violations, checks)
+    checks["requests"] = len(lcs)
+
+    finished = [x for x in lcs.values() if x.finish_t is not None]
+    if metrics is not None:
+        _match_samples("ttft", [x.ttft_s for x in finished
+                                if x.first_token_t is not None],
+                       metrics.get("ttfts_s", []), violations)
+        _match_samples("latency", [x.latency_s for x in finished],
+                       metrics.get("latencies_s", []), violations)
+        stall = sum(x.stall_s for x in lcs.values())
+        if not _close(stall, metrics.get("stall_s", 0.0)):
+            violations.append(f"stall: event-derived {stall!r} != recorded "
+                              f"{metrics.get('stall_s')!r}")
+        tokens = sum(x.first_tokens + x.decode_tokens for x in lcs.values())
+        if tokens != int(metrics.get("tokens_out", 0)):
+            violations.append(f"tokens_out: {tokens} token events vs "
+                              f"recorded {metrics.get('tokens_out')}")
+        if len(finished) != int(metrics.get("requests", len(finished))):
+            violations.append(f"requests: {len(finished)} finish events vs "
+                              f"recorded {metrics.get('requests')}")
+        preempts = sum(len(x.preempts) for x in lcs.values())
+        if preempts != int(metrics.get("preemptions", 0)):
+            violations.append(f"preemptions: {preempts} preempt events vs "
+                              f"recorded {metrics.get('preemptions')}")
+        committed = sum(n for x in lcs.values() for _, _, n in x.chunks)
+        if committed != int(metrics.get("chunk_tokens_committed", 0)):
+            violations.append(
+                f"chunk_tokens_committed: {committed} from events vs "
+                f"recorded {metrics.get('chunk_tokens_committed')}")
+        firsts = sum(x.first_tokens for x in lcs.values())
+        if firsts != int(metrics.get("prefills", 0)):
+            violations.append(f"prefills: {firsts} first_token events vs "
+                              f"recorded {metrics.get('prefills')}")
+        for key, kind in (("decode_only_steps", "decode_only"),
+                          ("chunk_steps", "unified")):
+            if kinds[kind] != int(metrics.get(key, 0)):
+                violations.append(f"{key}: {kinds[kind]} {kind} step_end "
+                                  f"events vs recorded {metrics.get(key)}")
+
+    # Chrome-trace-event export validity
+    try:
+        chrome = to_chrome_trace(events)
+        json.dumps(chrome)
+        for ev in chrome:
+            if "ph" not in ev or "pid" not in ev or "name" not in ev:
+                violations.append(f"chrome event missing required keys: {ev}")
+                break
+            if ev["ph"] != "M" and "ts" not in ev:
+                violations.append(f"chrome event missing ts: {ev}")
+                break
+        checks["chrome_events"] = len(chrome)
+    except (TypeError, ValueError, KeyError) as exc:
+        violations.append(f"chrome trace export failed: {exc!r}")
+
+    return AuditReport(violations, lcs, checks)
+
+
+# --------------------------------------------------------------- attribution
+def attribution_rows(lcs: Dict[int, Lifecycle]) -> List[Dict[str, float]]:
+    """Per-request time attribution: where each finished request's latency
+    went (queued / prefill / stalled / decode seconds and fractions)."""
+    rows = []
+    for rid in sorted(lcs):
+        x = lcs[rid]
+        if x.finish_t is None or x.arrival is None or not x.admits:
+            continue
+        parts = {"queued_s": x.queued_s, "prefill_s": x.prefill_s,
+                 "stall_s": x.stall_s, "decode_s": x.decode_s}
+        total = x.latency_s
+        row = {"rid": rid, "total_s": total, **parts}
+        for k, v in parts.items():
+            row[k.replace("_s", "_frac")] = \
+                (v / total) if total > 0 else 0.0
+        rows.append(row)
+    return rows
+
+
+def format_attribution(lcs: Dict[int, Lifecycle]) -> str:
+    """The per-request time-attribution table `bench_serving.py --trace`
+    prints: one line per request, latency split into phases."""
+    rows = attribution_rows(lcs)
+    if not rows:
+        return "(no finished requests in trace)"
+    lines = [f"{'rid':>5} {'total_s':>8} {'queued':>7} {'prefill':>8} "
+             f"{'stall':>7} {'decode':>7}"]
+    for r in rows:
+        lines.append(
+            f"{r['rid']:>5} {r['total_s']:>8.3f} {r['queued_frac']:>6.0%} "
+            f"{r['prefill_frac']:>7.0%} {r['stall_frac']:>6.0%} "
+            f"{r['decode_frac']:>6.0%}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------- CLI
+def main(argv: Optional[List[str]] = None) -> int:
+    """Audit a trace file captured by `bench_serving.py --trace` (CI runs
+    this on the smoke trace; any invariant violation is a non-zero exit)."""
+    import argparse
+
+    from repro.serve.trace import load_trace
+
+    ap = argparse.ArgumentParser(
+        description="audit a serve trace (Chrome JSON with embedded events)")
+    ap.add_argument("trace", help="path written by bench_serving.py --trace")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-request attribution table")
+    args = ap.parse_args(argv)
+    events, metrics, metadata = load_trace(args.trace)
+    if not events:
+        print(f"{args.trace}: no embedded serve events (was it written by "
+              "bench_serving.py --trace?)")
+        return 1
+    report = audit(events, metrics=metrics, metadata=metadata)
+    if not args.quiet:
+        print(format_attribution(report.lifecycles))
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,413 @@
+"""Structured serve tracing: recorder semantics, lifecycle audit, Chrome
+export, and the metrics fixes that rode along.
+
+The load-bearing contracts pinned here:
+
+  * the event taxonomy is CLOSED (unknown names raise) and the disabled
+    path (`NULL_RECORDER`) is a true no-op — a traced engine and an
+    untraced one emit byte-identical greedy streams with the same two
+    compiled step programs;
+  * a traced replay (virtual clock) passes the full `traceview.audit`:
+    per-request TTFT / latency / stall recomputed from event timestamps
+    match the `ServeMetrics` sample lists, every admit reaches a terminal
+    finish, the block pool conserves, decode-only steps carry zero chunk
+    tokens, and the Chrome-trace export is valid JSON;
+  * the audit actually BITES: corrupting a trace (dropped finish, forged
+    free_after, inflated metrics) flips it to FAIL;
+  * write_trace/load_trace round-trip events + metrics + metadata through
+    one Perfetto-openable file;
+  * satellites — `ServeMetrics.wall_s` is 0.0 (not 1e-9) while unset,
+    `percentile` boundary behaviour, `chunk_fill_frac` with no chunk
+    steps, and the pinned `bench_serving` CSV schema.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.kvcache import BlockAllocator, KVCacheConfig
+from repro.serve.metrics import ServeMetrics, percentile
+from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.trace import (
+    EVENT_TYPES,
+    NULL_RECORDER,
+    TraceEvent,
+    TraceRecorder,
+    load_trace,
+    metrics_snapshot,
+    to_chrome_trace,
+    write_trace,
+)
+from repro.serve import traceview
+
+# benchmarks/ is a PEP 420 namespace package next to src/, not on the
+# src path — make the CSV-schema import work under `PYTHONPATH=src pytest`
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax  # noqa: E402
+
+from repro.distributed.sharding import DEFAULT_RULES  # noqa: E402
+from repro.launch.mesh import single_device_mesh  # noqa: E402
+
+
+# ---------------------------------------------------------------- recorder
+def test_recorder_rejects_unknown_event_names():
+    rec = TraceRecorder(now_fn=lambda: 1.0)
+    rec.emit("submit", rid=1, arrival=0.5, prompt_len=4, max_new=2)
+    assert len(rec) == 1
+    with pytest.raises(ValueError, match="taxonomy is closed"):
+        rec.emit("sumbit", rid=1)          # typo must be loud, not recorded
+    assert len(rec) == 1
+
+
+def test_recorder_clock_binding_and_explicit_timestamps():
+    clock = {"t": 3.0}
+    rec = TraceRecorder(now_fn=lambda: clock["t"])
+    rec.emit("preempt", rid=7, slot=0)
+    clock["t"] = 9.0
+    rec.emit("finish", rid=7, n_output=2)
+    rec.emit("compile", t=4.5, program="unified")
+    assert [e.t for e in rec.events] == [3.0, 9.0, 4.5]
+    rec.clear()
+    assert len(rec) == 0 and rec.events == []
+
+
+def test_null_recorder_is_inert():
+    assert NULL_RECORDER.enabled is False
+    NULL_RECORDER.emit("nonsense_name_never_validated", rid=1)
+    NULL_RECORDER.emit("finish", rid=1)
+    assert len(NULL_RECORDER) == 0
+    NULL_RECORDER.clear()
+    assert list(NULL_RECORDER.events) == []
+
+
+def test_trace_event_dict_roundtrip():
+    e = TraceEvent("chunk_committed", 1.25, rid=3,
+                   fields={"start": 0, "n": 8, "prefilled": 8})
+    assert TraceEvent.from_dict(e.to_dict()) == e
+    # rid-less (scheduler-scoped) events omit the rid key entirely
+    s = TraceEvent("step_begin", 0.0, fields={"step": 0, "kind": "unified"})
+    assert "rid" not in s.to_dict()
+    assert TraceEvent.from_dict(s.to_dict()) == s
+
+
+# ------------------------------------------------------- metrics satellites
+def test_wall_s_zero_until_clock_set():
+    """Regression: wall_s used to return the 1e-9 division sentinel while
+    start/end were unset, so tokens_per_s() on an engine that never ran
+    reported billions of tok/s instead of 0."""
+    m = ServeMetrics()
+    m.tokens_out = 100
+    assert m.wall_s == 0.0
+    assert m.tokens_per_s() == 0.0
+    assert m.summary()["tokens_per_s"] == 0.0
+    m.start_time, m.end_time = 2.0, 6.0
+    assert m.wall_s == 4.0
+    assert m.tokens_per_s() == 25.0
+
+
+def test_percentile_boundaries():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 0) == 1.0       # p=0 clamps to the minimum
+    assert percentile(xs, 100) == 5.0
+    assert percentile(xs, 50) == 3.0
+    assert percentile([7.25], 0) == 7.25  # single element, any p
+    assert percentile([7.25], 100) == 7.25
+    assert percentile([2.0, 2.0, 2.0, 9.0], 50) == 2.0   # duplicates
+    assert percentile([2.0, 2.0, 2.0, 9.0], 95) == 9.0
+    assert percentile([], 95) == 0.0
+
+
+def test_chunk_fill_frac_zero_without_chunk_steps():
+    m = ServeMetrics()
+    assert m.chunk_fill_frac() == 0.0
+    m.record_decode_only_step()           # decode-only steps pay no lane
+    assert m.chunk_fill_frac() == 0.0
+    m.record_chunk_step([3, 5], lane_width=16)
+    assert m.chunk_fill_frac() == 0.5
+
+
+def test_bench_serving_csv_schema_pinned():
+    """The harness CSV contract: exact ordered row names + 3-tuple rows.
+    Extending the bench means updating this snapshot in the same change."""
+    from benchmarks import bench_serving as bs
+
+    assert bs.expected_csv_names() == [
+        "serve_fixed_tok_s",
+        "serve_continuous_tok_s",
+        "serve_speedup_x",
+        "serve_chunk_fill_frac",
+        "serve_packing_packed_tok_s",
+        "serve_packing_single_seg_tok_s",
+        "serve_interference_chunked_decode_tbt_p95_s",
+        "serve_interference_unchunked_decode_tbt_p95_s",
+        "serve_pool_1.00x_tok_s",
+        "serve_pool_0.50x_tok_s",
+        "serve_pool_0.25x_tok_s",
+        "serve_lane_xla-only_tok_s",
+        "serve_lane_tuned_plan_tok_s",
+        "serve_lane_forced_pallas_tok_s",
+    ]
+    # sections the smoke run skips drop their rows, never reorder the rest
+    assert bs.expected_csv_names(pressure=False, lanes=False) == \
+        bs.expected_csv_names()[:8]
+    row = bs.csv_row("serve_fixed_tok_s", np.float64(12.5), "derived note")
+    assert row == ("serve_fixed_tok_s", 12.5, "derived note")
+    assert isinstance(row[1], float) and len(row) == len(bs.CSV_COLUMNS)
+    assert bs.csv_row("x", 3)[2] == ""
+    with pytest.raises(ValueError):
+        bs.csv_row("", 1.0)
+    with pytest.raises((TypeError, ValueError)):
+        bs.csv_row("serve_fixed_tok_s", "not-a-number")
+
+
+# ------------------------------------------------------------ reject events
+def test_scheduler_emits_reject_event_before_raising():
+    kv = KVCacheConfig(num_blocks=4, block_size=4, max_blocks_per_seq=8)
+    rec = TraceRecorder(now_fn=lambda: 0.0)
+    sched = ContinuousScheduler(2, kv, BlockAllocator(kv), trace=rec)
+    req = ServeRequest(rid=1, prompt=np.zeros(16, np.int32),
+                       max_new_tokens=4, arrival_time=0.0)
+    with pytest.raises(ValueError, match="KV blocks"):
+        sched.submit(req)
+    rejects = [e for e in rec.events if e.name == "reject"]
+    assert len(rejects) == 1 and rejects[0].rid == 1
+    assert "KV blocks" in rejects[0].fields["reason"]
+    assert not sched.waiting                # rejected, not queued
+
+
+# -------------------------------------------------------------- engine e2e
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                           vocab=97)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, chunk_tokens=8, chunk_segments=4,
+            num_blocks=None, max_slots=4, now_fn=None, trace=None,
+            max_new=10):
+    return ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=max_slots, block_size=8, max_blocks_per_seq=6,
+                      num_blocks=num_blocks, max_new_tokens=max_new,
+                      chunk_tokens=chunk_tokens,
+                      chunk_segments=chunk_segments),
+        now_fn=now_fn, trace=trace)
+
+
+def _replay(model, params, arrivals, prompts, budgets, *, trace=None,
+            num_blocks=None, max_slots=3, chunk_tokens=6):
+    """Drive a Poisson workload under the deterministic virtual clock the
+    differential fuzz uses; returns (engine, {rid: tokens})."""
+    clock = {"t": 0.0}
+    eng = _engine(model, params, chunk_tokens=chunk_tokens,
+                  num_blocks=num_blocks, max_slots=max_slots,
+                  now_fn=lambda: clock["t"], trace=trace)
+    for a, p, b in zip(arrivals, prompts, budgets):
+        eng.submit(p, max_new_tokens=b, arrival_time=float(a))
+    eng.metrics.start_time = 0.0
+    with eng.mesh:
+        while eng.scheduler.has_work:
+            ran = eng.step()
+            clock["t"] += 0.2 if ran else 0.05
+    eng.metrics.end_time = clock["t"]
+    return eng, {r.rid: r.output for r in eng._done}
+
+
+def _workload(cfg, seed, n=8, max_prompt=20):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.2, size=n))
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(3, max_prompt)))
+               .astype(np.int32) for _ in range(n)]
+    budgets = [int(rng.integers(2, 10)) for _ in range(n)]
+    return arrivals, prompts, budgets
+
+
+def test_traced_replay_passes_audit_and_roundtrips(tiny_lm, tmp_path):
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _workload(cfg, seed=0)
+    rec = TraceRecorder()
+    eng, outs = _replay(model, params, arrivals, prompts, budgets, trace=rec)
+    assert len(outs) == len(prompts)
+    # recorder stamped events on the ENGINE's virtual clock, in order
+    assert rec.now_fn is eng.now_fn
+    ts = [e.t for e in rec.events]
+    assert ts == sorted(ts) and ts[-1] > 0.0
+    names = {e.name for e in rec.events}
+    assert {"submit", "admit", "chunk_scheduled", "chunk_committed",
+            "first_token", "decode_token", "finish", "block_alloc",
+            "block_free", "step_begin", "step_end", "compile"} <= names
+    assert names <= EVENT_TYPES
+
+    report = traceview.audit(rec.events, metrics=eng.metrics,
+                             metadata={"usable_blocks":
+                                       eng.kv_cfg.num_blocks - 1})
+    assert report.ok, report.summary()
+    assert report.checks["requests"] == len(prompts)
+    assert report.checks["unified_steps"] == eng.metrics.chunk_steps
+    assert report.checks["decode_only_steps"] \
+        == eng.metrics.decode_only_steps
+
+    # every lifecycle's event-derived phases tile its latency
+    for x in report.lifecycles.values():
+        parts = x.queued_s + x.prefill_s + x.stall_s + x.decode_s
+        assert not math.isnan(parts)
+        assert abs(parts - x.latency_s) < 1e-9
+    table = traceview.format_attribution(report.lifecycles)
+    assert len(table.splitlines()) == len(prompts) + 1   # header + rows
+
+    # file round-trip: one Perfetto-openable JSON carrying the raw stream
+    path = tmp_path / "trace.json"
+    write_trace(str(path), rec.events, metrics=eng.metrics,
+                metadata={"usable_blocks": eng.kv_cfg.num_blocks - 1})
+    payload = json.loads(path.read_text())
+    assert isinstance(payload["traceEvents"], list) and payload["traceEvents"]
+    events2, metrics2, metadata2 = load_trace(str(path))
+    assert [e.to_dict() for e in events2] \
+        == [e.to_dict() for e in rec.events]
+    assert metrics2 == metrics_snapshot(eng.metrics)
+    report2 = traceview.audit(events2, metrics=metrics2, metadata=metadata2)
+    assert report2.ok, report2.summary()
+    # the audit CLI agrees, end to end
+    assert traceview.main([str(path), "--quiet"]) == 0
+
+
+def test_traced_preemption_replay_passes_audit(tiny_lm):
+    """Pool pressure layered on chunking: the swap path emits its events
+    (preempt / swap_out / swap_in / resume), stall recomputed from
+    preempt->resume-admit intervals matches stall_s, and the pool replay
+    conserves across the swap traffic."""
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _workload(cfg, seed=1, n=10, max_prompt=28)
+    rec = TraceRecorder()
+    eng, outs = _replay(model, params, arrivals, prompts, budgets,
+                        trace=rec, num_blocks=8)
+    assert eng.metrics.preemptions >= 1
+    names = [e.name for e in rec.events]
+    for needed in ("preempt", "swap_out", "swap_in", "resume"):
+        assert needed in names
+    report = traceview.audit(rec.events, metrics=eng.metrics,
+                             metadata={"usable_blocks":
+                                       eng.kv_cfg.num_blocks - 1})
+    assert report.ok, report.summary()
+    stalled = [x for x in report.lifecycles.values() if x.stalls]
+    assert stalled and all(x.stall_s > 0 for x in stalled)
+
+
+def test_audit_bites_on_corrupted_traces(tiny_lm):
+    """The audit must FAIL loudly when the trace and the metrics disagree —
+    otherwise the CI step is theater."""
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _workload(cfg, seed=2, n=6)
+    rec = TraceRecorder()
+    eng, _ = _replay(model, params, arrivals, prompts, budgets, trace=rec)
+    meta = {"usable_blocks": eng.kv_cfg.num_blocks - 1}
+    assert traceview.audit(rec.events, eng.metrics, meta).ok
+
+    # (a) an admitted request that never terminates
+    dropped = [e for e in rec.events
+               if not (e.name == "finish" and e.rid == 1)]
+    r = traceview.audit(dropped, eng.metrics, meta)
+    assert not r.ok and any("terminal" in v for v in r.violations)
+
+    # (b) forged pool accounting
+    forged = [TraceEvent(e.name, e.t, e.rid, dict(e.fields))
+              for e in rec.events]
+    for e in forged:
+        if e.name == "block_alloc":
+            e.fields["free_after"] += 1
+            break
+    r = traceview.audit(forged, eng.metrics, meta)
+    assert not r.ok and any("free_after" in v for v in r.violations)
+
+    # (c) inflated aggregate metrics
+    snap = metrics_snapshot(eng.metrics)
+    snap["tokens_out"] += 5
+    r = traceview.audit(rec.events, snap, meta)
+    assert not r.ok and any("tokens_out" in v for v in r.violations)
+
+
+def test_tracing_is_invisible_to_tokens_and_compiles(tiny_lm):
+    """Tracing must not perturb serving: a traced engine and an untraced
+    one emit byte-identical greedy streams, and each still owns exactly
+    two step executables compiled exactly once."""
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _workload(cfg, seed=3)
+    eng_off, out_off = _replay(model, params, arrivals, prompts, budgets)
+    rec = TraceRecorder()
+    eng_on, out_on = _replay(model, params, arrivals, prompts, budgets,
+                             trace=rec)
+    assert out_on == out_off
+    for eng in (eng_off, eng_on):
+        assert eng._unified._cache_size() == 1
+        assert eng._decode_only._cache_size() == 1
+    assert len(rec) > 0
+    assert isinstance(eng_off.trace, type(NULL_RECORDER))
+    # the traced engine saw its compiles as events too
+    compiled = {e.fields["program"] for e in rec.events
+                if e.name == "compile"}
+    assert {"unified", "decode_only"} <= compiled
+
+
+def test_chrome_export_track_structure(tiny_lm):
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _workload(cfg, seed=4, n=4)
+    rec = TraceRecorder()
+    _replay(model, params, arrivals, prompts, budgets, trace=rec)
+    chrome = to_chrome_trace(rec.events)
+    json.dumps(chrome)                      # serializable
+    pids = {e["pid"] for e in chrome}
+    assert pids == {1, 2, 3}                # requests / scheduler / pool
+    spans = {e["name"] for e in chrome if e["ph"] == "X"}
+    assert {"queued", "prefill", "decode"} <= spans
+    assert any(n.startswith("step:") for n in spans)
+    assert all(e["dur"] >= 0.0 for e in chrome if e["ph"] == "X")
+    assert any(e["ph"] == "C" and e["name"] == "free_blocks" for e in chrome)
+    # timestamps are rebased: the earliest event opens at ts=0
+    assert min(e["ts"] for e in chrome if "ts" in e) == 0.0
+    assert to_chrome_trace([]) == []
+
+
+# ------------------------------------------------------------- slow replay
+@pytest.mark.slow
+def test_traced_poisson_fuzz_audit(tiny_lm, tmp_path):
+    """Acceptance: seeded Poisson workloads exercising chunking, packing
+    and pool-pressure preemption, replayed with tracing ON — the full
+    audit passes on every seed (event-recomputed TTFT / latency / stall
+    match ServeMetrics, every admit terminal, pool conserves) and the
+    written file is valid Chrome-trace JSON, while the traced streams stay
+    byte-identical to untraced ones."""
+    cfg, model, params = tiny_lm
+    for seed in range(3):
+        arrivals, prompts, budgets = _workload(cfg, seed=seed, n=12,
+                                               max_prompt=28)
+        rec = TraceRecorder()
+        eng, out_t = _replay(model, params, arrivals, prompts, budgets,
+                             trace=rec, num_blocks=8)
+        _, out_u = _replay(model, params, arrivals, prompts, budgets,
+                           num_blocks=8)
+        assert out_t == out_u, f"traced stream diverged (seed {seed})"
+        assert eng.metrics.preemptions >= 1, f"no preemption (seed {seed})"
+        assert eng.metrics.packed_segments > 0, f"no packing (seed {seed})"
+        assert eng.metrics.decode_only_steps > 0, seed
+        meta = {"usable_blocks": eng.kv_cfg.num_blocks - 1, "seed": seed}
+        report = traceview.audit(rec.events, metrics=eng.metrics,
+                                 metadata=meta)
+        assert report.ok, f"seed {seed}: {report.summary()}"
+        path = tmp_path / f"trace_{seed}.json"
+        write_trace(str(path), rec.events, metrics=eng.metrics,
+                    metadata=meta)
+        payload = json.loads(path.read_text())
+        assert payload["traceEvents"]
+        assert traceview.main([str(path), "--quiet"]) == 0
