@@ -63,6 +63,15 @@ this CPU container the Pallas lanes execute in interpret mode, so their
 tokens/s is NOT a TPU performance statement — the section demonstrates
 observable plan-driven dispatch and measures the xla-vs-tuned delta.
 
+`--family ssm` swaps the model family: the SAME continuous scheduler
+serves Mamba2 through the `SSMFamilyAdapter` (fixed-size slot-pooled
+conv+SSM state rows instead of paged KV blocks — repro.serve.statecache),
+with the state pool provisioned one row short of the slot count so the
+replay exercises slot preemption + host swap, vs the arrival-aware
+`FixedBatchEngine` drain on the same Poisson workload.  Reported: useful
+tokens/s both engines, TTFT p95, preemption count, and a zero-errors
+guard (every submitted request must complete).
+
 `--trace out.json` additionally records the headline continuous run's
 structured event trace (repro.serve.trace): the file is Chrome-trace JSON
 (drop it on ui.perfetto.dev for one timeline track per request plus
@@ -605,6 +614,112 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
     return out
 
 
+# ------------------------------------------------------ ssm family scenario
+def bench_ssm(requests: int = 16, slots: int = 3, seed: int = 0,
+              rate_hz: float = 0.0, verbose: bool = True,
+              trace_path: str = None) -> dict:
+    """Mamba2 through the SAME continuous scheduler (`--family ssm`).
+
+    The `SSMFamilyAdapter` swaps the paged KV pool for the fixed-size
+    `SlotStateCache` (one conv+SSM state row per in-flight request) while
+    the orchestration loop, scheduler, metrics and trace taxonomy stay
+    exactly the decoder's.  The state pool is provisioned one row SHORT
+    of the slot count (`state_slots = slots`, usable = slots - 1), so the
+    replay exercises slot preemption + host swap on state rows the way
+    the decoder's pool-pressure sweep does on KV blocks.  Reference: the
+    same Poisson workload drained arrival-aware through the
+    `FixedBatchEngine` (whole-prompt prefill, full worst-case budget)."""
+    cfg = get_config("mamba2-2.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    mesh = single_device_mesh()
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+
+    q = cfg.ssm_chunk
+    prompt_pad, new_hi = 3 * q, 12
+    rcfg = RuntimeConfig(max_slots=slots, chunk_tokens=q,
+                         max_new_tokens=new_hi, state_slots=slots)
+    recorder = TraceRecorder() if trace_path else None
+    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg,
+                              trace=recorder)
+    assert engine.family == "ssm", engine.family
+    warm_engine(engine, cfg.vocab, q)
+
+    # Sustained (post-compile) capacity -> arrival rate, as the decoder does.
+    t0 = time.perf_counter()
+    burst = 3 * slots
+    for _ in range(burst):
+        engine.submit(rng.integers(0, cfg.vocab, size=q).astype(np.int32),
+                      max_new_tokens=8)
+    engine.run()
+    cap_tok_s = (burst * 8) / (time.perf_counter() - t0)
+    engine.reset_metrics()
+    if rate_hz <= 0:
+        rate_hz = max(0.1, 1.3 * cap_tok_s / ((2 + new_hi) / 2))
+    if verbose:
+        print(f"[ssm] sustained decode capacity ~{cap_tok_s:,.0f} tok/s -> "
+              f"Poisson rate {rate_hz:.2f} req/s")
+
+    # Arbitrary prompt lengths: the chunk lane pads ragged tails with
+    # zero-dt rows; the fixed drain left-pads to `prompt_pad` (a multiple
+    # of the SSD scan chunk, which whole-prompt prefill requires).
+    workload = make_workload(rng, requests, cfg.vocab, rate_hz,
+                             prompt_lo=4, prompt_hi=prompt_pad,
+                             new_lo=2, new_hi=new_hi)
+    if recorder is not None:
+        recorder.clear()      # the trace covers exactly the headline replay
+    cont = drive_continuous(engine, workload)
+    s = engine.metrics.summary()
+    fixed = drive_fixed(
+        model, params, mesh,
+        ServeConfig(batch_size=slots, max_seq=prompt_pad + new_hi,
+                    max_new_tokens=new_hi),
+        prompt_pad=prompt_pad, workload=workload)
+    speedup = cont["tokens_per_s"] / max(1e-9, fixed["tokens_per_s"])
+    errors = requests - cont["done"]
+    out = {"fixed": fixed, "continuous": cont, "speedup": speedup,
+           "preemptions": int(s["preemptions"]),
+           "ttft_p95_s": s["ttft_p95_s"], "errors": errors}
+    if verbose:
+        print(f"[ssm] fixed      : {fixed['tokens_per_s']:8.1f} tok/s | "
+              f"p95 {fixed['latency_p95_s']:6.2f}s | {fixed['done']} reqs")
+        print(f"[ssm] continuous : {cont['tokens_per_s']:8.1f} tok/s | "
+              f"p95 {cont['latency_p95_s']:6.2f}s | "
+              f"ttft p95 {s['ttft_p95_s']:.2f}s | "
+              f"preemptions {out['preemptions']} | slot occ "
+              f"{cont['slot_occupancy']:.0%} | state occ "
+              f"{cont['cache_occupancy']:.0%}")
+        print(f"[ssm] continuous-batching speedup: {speedup:.2f}x tokens/s | "
+              f"errors {errors} "
+              f"({'PASS' if errors == 0 else 'FAIL'}: continuous completes "
+              "the full workload)")
+    if recorder is not None:
+        metadata = {
+            # one state row per request: the pool audit replays slot
+            # alloc/free as 1-block events against the usable row count
+            "usable_blocks": engine.cache.cfg.usable,
+            "block_size": 1,
+            "max_slots": rcfg.max_slots,
+            "chunk_width": engine._chunk_width,
+            "chunk_segments": engine._chunk_segments,
+            "family": "ssm",
+            "requests": requests, "seed": seed,
+        }
+        write_trace(trace_path, recorder.events, metrics=engine.metrics,
+                    metadata=metadata)
+        report = traceview.audit(recorder.events, metrics=engine.metrics,
+                                 metadata=metadata)
+        out["trace_audit_ok"] = report.ok
+        if verbose:
+            print(f"--- trace: {len(recorder.events)} events -> {trace_path} "
+                  "(Chrome trace-event JSON; open in ui.perfetto.dev) ---")
+            print("per-request time attribution (from trace events):")
+            print(traceview.format_attribution(report.lifecycles))
+            print(report.summary())
+    return out
+
+
 # -------------------------------------------------------------- CSV schema
 # The harness CSV contract (benchmarks/run.py prints `name,us_per_call,
 # derived`).  Rows used to be ad-hoc tuples appended in run(); the schema —
@@ -630,7 +745,8 @@ def csv_row(name: str, value, derived: str = "") -> tuple:
 
 
 def expected_csv_names(packing: bool = True, interference: bool = True,
-                       pressure: bool = True, lanes: bool = True) -> list:
+                       pressure: bool = True, lanes: bool = True,
+                       ssm: bool = True) -> list:
     """The exact, ordered row names run() appends — the pinned schema."""
     names = ["serve_fixed_tok_s", "serve_continuous_tok_s",
              "serve_speedup_x", "serve_chunk_fill_frac"]
@@ -645,6 +761,9 @@ def expected_csv_names(packing: bool = True, interference: bool = True,
     if lanes:
         names += [f"serve_lane_{l.replace(' ', '_')}_tok_s"
                   for l in LANE_LABELS]
+    if ssm:
+        names += ["serve_ssm_fixed_tok_s", "serve_ssm_continuous_tok_s",
+                  "serve_ssm_speedup_x", "serve_ssm_preemptions"]
     return names
 
 
@@ -690,6 +809,18 @@ def run(csv_rows):
         csv_rows.append(csv_row(
             f"serve_lane_{label.replace(' ', '_')}_tok_s",
             lr["tokens_per_s"], lanes or "no plan (all xla)"))
+    sr = bench_ssm(requests=8, slots=3, verbose=False)
+    csv_rows.append(csv_row("serve_ssm_fixed_tok_s",
+                            sr["fixed"]["tokens_per_s"]))
+    csv_rows.append(csv_row("serve_ssm_continuous_tok_s",
+                            sr["continuous"]["tokens_per_s"],
+                            f"ttft_p95={sr['ttft_p95_s']:.2f}s "
+                            f"errors={sr['errors']}"))
+    csv_rows.append(csv_row("serve_ssm_speedup_x", sr["speedup"],
+                            "mamba2 continuous vs fixed, same Poisson "
+                            "workload"))
+    csv_rows.append(csv_row("serve_ssm_preemptions", sr["preemptions"],
+                            "state pool one row short of slots"))
     got = [row[0] for row in csv_rows[start:]]
     if got != expected_csv_names():
         raise AssertionError(
@@ -700,6 +831,11 @@ def run(csv_rows):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--family", choices=("decoder", "ssm"), default="decoder",
+                    help="model family behind the continuous scheduler: "
+                         "decoder (paged KV blocks) or ssm (Mamba2, "
+                         "slot-pooled state rows; implies a zero-errors "
+                         "guard and skips the decoder-only sweeps)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rate", type=float, default=0.0,
@@ -726,6 +862,18 @@ if __name__ == "__main__":
                          "to PATH (Chrome-trace JSON, opens in "
                          "ui.perfetto.dev; audited against ServeMetrics)")
     args = ap.parse_args()
+    if args.family == "ssm":
+        result = bench_ssm(args.requests, args.slots, args.seed, args.rate,
+                           trace_path=args.trace)
+        if args.trace and not result.get("trace_audit_ok", False):
+            print("trace audit: FAIL — event trace disagrees with "
+                  "ServeMetrics")
+            raise SystemExit(1)
+        if result["errors"]:
+            print(f"zero-errors guard: FAIL — {result['errors']} requests "
+                  "never completed")
+            raise SystemExit(1)
+        raise SystemExit(0)
     result = bench(args.requests, args.slots, args.seed, args.rate,
                    lanes=not args.no_lanes, lane_requests=args.lane_requests,
                    pressure=not args.no_pressure,

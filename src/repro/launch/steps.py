@@ -444,3 +444,130 @@ def jit_commit_prefill(model, mesh: Mesh, rules: ShardingRules):
                                          None),
                    out_shardings=(pool_shard, pool_shard),
                    donate_argnums=(0, 1))
+
+
+# ------------------------------------------- slot-pooled (continuous) serving
+# The state-cache families' counterparts of the paged builders above: the
+# per-request state is fixed-size (conv window + SSM state), so the pool is
+# a (layers, num_slots, ...) grid, the "block table" degenerates to ONE
+# traced row index per request, and there is no growth and no in-decode
+# extension — otherwise the program discipline is identical: every shape is
+# static in (slots, pool rows, chunk width), exactly two step executables,
+# admission compiles nothing.
+
+def slot_state_shardings(model, mesh: Mesh, rules: ShardingRules):
+    """(conv NamedSharding, ssm NamedSharding) of the slot state pools:
+    pool rows replicated, feature axes sharded per the model's declared
+    logical axes (`MambaLM.slot_state_logical_axes`)."""
+    axes = model.slot_state_logical_axes()
+    return (NamedSharding(mesh, rules.spec(axes["conv"])),
+            NamedSharding(mesh, rules.spec(axes["ssm"])))
+
+
+def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
+                         decode_matmul_table=None, chunk_matmul_table=None,
+                         interpret: bool = True):
+    """(params, conv_pool, ssm_pool,
+        dec_state_idx, dec_tokens,                # decode lane: every slot
+        ch_tokens, ch_state_idx, ch_seg_len, ch_seg_start)  # prefill lane
+        -> (dec_next (slots,), ch_next (), conv_pool, ssm_pool)
+
+    THE ssm serving step for steps that carry prompt work: one C-token
+    prompt segment (C a multiple of `cfg.ssm_chunk`, rows past `ch_seg_len`
+    dt-masked into exact identities) committed into the chunk request's
+    state row, alongside a decode token for every in-flight slot
+    (`dec_state_idx` maps slot -> pool row; idle/prefilling slots point at
+    the null row).  The lanes touch disjoint pool rows — a request never
+    prefills and decodes in the same step — so XLA may schedule them
+    freely.  Every index is traced data: admission, chunk progress,
+    retirement, preemption and resume never recompile, and `ch_seg_start
+    == 0` selects zero carries in-program so a freshly claimed row needs no
+    zeroing pass.  `ch_next` is the segment's next-token argmax, consumed
+    by the host only when the segment completes its prompt."""
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    conv_shard, ssm_shard = slot_state_shardings(model, mesh, rules)
+    slot_shard = NamedSharding(mesh, rules.spec(("batch",)))
+    row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+
+    def ssm_unified_step(params, conv_pool, ssm_pool, dec_state_idx,
+                         dec_tokens, ch_tokens, ch_state_idx, ch_seg_len,
+                         ch_seg_start):
+        with activation_rules(rules):
+            # prefill lane: one prompt segment, state committed in-program
+            with matmul_dispatch(chunk_matmul_table, interpret=interpret):
+                ch_logits, conv_pool, ssm_pool = model.prefill_chunk_slots(
+                    params, conv_pool, ssm_pool, ch_state_idx, ch_tokens,
+                    ch_seg_len, ch_seg_start)
+            # decode lane: one token for every slot
+            with matmul_dispatch(decode_matmul_table, interpret=interpret):
+                logits, conv_pool, ssm_pool = model.decode_step_slots(
+                    params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        ch_next = jnp.argmax(ch_logits[0, -1], -1).astype(jnp.int32)
+        return nxt, ch_next, conv_pool, ssm_pool
+
+    return jax.jit(
+        ssm_unified_step,
+        in_shardings=(p_shard, conv_shard, ssm_shard, slot_shard, row_shard,
+                      None, None, None, None),
+        out_shardings=(None, None, conv_shard, ssm_shard),
+        donate_argnums=(1, 2),
+    )
+
+
+def jit_ssm_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
+                             decode_matmul_table=None,
+                             interpret: bool = True):
+    """(params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
+        -> (dec_next (slots,), conv_pool, ssm_pool)
+
+    The ssm decode-only fast path: the unified step's decode lane compiled
+    without the chunk lane, dispatched whenever no prompt work is pending.
+    Pool shapes/shardings match the unified program exactly, so the donated
+    pools ping-pong between the two executables without a layout shift, and
+    the decode lane's float program is identical — switching programs is
+    invisible to the token streams."""
+    rules = prune_for_mesh(rules, mesh)
+    p_shard, _ = make_state_shardings(model, mesh, rules, None)
+    conv_shard, ssm_shard = slot_state_shardings(model, mesh, rules)
+    slot_shard = NamedSharding(mesh, rules.spec(("batch",)))
+    row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+
+    def ssm_decode_only_step(params, conv_pool, ssm_pool, dec_state_idx,
+                             dec_tokens):
+        with activation_rules(rules):
+            with matmul_dispatch(decode_matmul_table, interpret=interpret):
+                logits, conv_pool, ssm_pool = model.decode_step_slots(
+                    params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return nxt, conv_pool, ssm_pool
+
+    return jax.jit(
+        ssm_decode_only_step,
+        in_shardings=(p_shard, conv_shard, ssm_shard, slot_shard, row_shard),
+        out_shardings=(None, conv_shard, ssm_shard),
+        donate_argnums=(1, 2),
+    )
+
+
+def jit_ssm_commit_state(model, mesh: Mesh, rules: ShardingRules):
+    """(conv_pool, ssm_pool, conv, ssm, row) -> (conv_pool, ssm_pool)
+
+    Scatter one request's per-layer state (conv (L, W-1, conv_dim), ssm
+    (L, nh, hd, n)) into pool row `row` — the ssm resume path: a preempted
+    request's swapped-out state read back from the host buffer into its
+    freshly claimed row.  `row` is traced data, so exactly one shape ever
+    traces.  Donates the pools."""
+    rules = prune_for_mesh(rules, mesh)
+    conv_shard, ssm_shard = slot_state_shardings(model, mesh, rules)
+
+    def commit(conv_pool, ssm_pool, conv, ssm, row):
+        conv_pool = conv_pool.at[:, row].set(conv.astype(conv_pool.dtype))
+        ssm_pool = ssm_pool.at[:, row].set(ssm.astype(ssm_pool.dtype))
+        return conv_pool, ssm_pool
+
+    return jax.jit(commit,
+                   in_shardings=(conv_shard, ssm_shard, None, None, None),
+                   out_shardings=(conv_shard, ssm_shard),
+                   donate_argnums=(0, 1))

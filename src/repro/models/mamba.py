@@ -82,6 +82,24 @@ def _causal_conv(w, b, xbc: jnp.ndarray, act=jax.nn.silu) -> jnp.ndarray:
     return act(out + b.astype(xbc.dtype))
 
 
+def _causal_conv_carry(w, b, xbc: jnp.ndarray, carry: jnp.ndarray,
+                       act=jax.nn.silu) -> jnp.ndarray:
+    """`_causal_conv` continued from a previous segment: the last `W-1`
+    raw inputs of that segment (`carry`, (B, W-1, conv_dim)) stand in for
+    the zero left-padding.  Same shift-and-accumulate order as
+    `_causal_conv`, so a fresh (all-zero) carry is bitwise identical to the
+    from-scratch conv — that equivalence is what lets chunked serve-time
+    prefill reproduce `mamba_forward` exactly."""
+    width = w.shape[0]
+    s = xbc.shape[1]
+    ext = jnp.concatenate([carry.astype(xbc.dtype), xbc], axis=1)
+    out = xbc * w[-1].astype(xbc.dtype)
+    for i in range(1, width):
+        shifted = ext[:, width - 1 - i : width - 1 - i + s]
+        out = out + shifted * w[-1 - i].astype(xbc.dtype)
+    return act(out + b.astype(xbc.dtype))
+
+
 def _segsum(x: jnp.ndarray) -> jnp.ndarray:
     """(..., Q) -> (..., Q, Q) lower-triangular segment sums:
     out[i, j] = sum_{j < t <= i} x[t]; -inf above the diagonal."""
@@ -92,9 +110,15 @@ def _segsum(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
     """SSD scan.  x: (b, s, h, p); dt: (b, s, h); A: (h,);
-    B, C: (b, s, n).  Returns y: (b, s, h, p), final state (b, h, p, n)."""
+    B, C: (b, s, n).  Returns y: (b, s, h, p), final state (b, h, p, n).
+
+    `h0` (optional, (b, h, p, n)) seeds the inter-chunk recurrence —
+    serve-time chunked prefill threads the previous segment's state through
+    it.  The default (None -> zeros) is the exact value the scan used
+    before the parameter existed, so existing callers are bitwise
+    unchanged."""
     b, s, h, p = x.shape
     n = B.shape[-1]
     q = min(chunk, s)
@@ -125,7 +149,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         h_new = h_prev * decay[..., None, None] + st
         return h_new, h_prev
 
-    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
     h_final, h_prevs = jax.lax.scan(
         step, h0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
     h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (b, nc, h, p, n)
@@ -168,6 +193,66 @@ def mamba_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     return out
 
 
+def mamba_chunk_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                        conv_carry: jnp.ndarray, h0: jnp.ndarray,
+                        seg_len: jnp.ndarray):
+    """One serve-time prefill segment, resumable: `mamba_forward` over a
+    fixed-width window `x` (B, C, d) of which only the first `seg_len`
+    rows are real prompt, continuing from `conv_carry` (B, W-1, conv_dim)
+    and SSM state `h0` (B, nh, hd, n).
+
+    Bitwise contract (pinned by tests): feeding a prompt through this in
+    `C`-token segments — zero carries on the first segment, each segment's
+    returned carries into the next — reproduces `mamba_forward`'s outputs
+    and final state EXACTLY, provided `C` is a multiple of `cfg.ssm_chunk`.
+    Three mechanisms make that exact rather than approximate:
+
+      * padding rows beyond `seg_len` get dt forced to 0.0 AFTER the
+        softplus, which makes them exact identities in the SSD recurrence
+        (`exp(0) = 1` state decay, `+0.0` state update) — no masking of x
+        or B/C is needed;
+      * the conv continues via `_causal_conv_carry`, whose accumulation
+        order matches `_causal_conv` term for term;
+      * the inter-chunk scan is seeded with `h0` through `ssd_chunked`'s
+        initial-state parameter — the per-chunk step function is the one
+        the full pass runs.
+
+    Returns (y (B, C, d), new_conv_carry (B, W-1, conv_dim) f32,
+    h_final (B, nh, hd, n) f32).  The new conv carry is read at offset
+    `seg_len` of the carry-extended raw conv input, i.e. the last W-1 REAL
+    rows even when the segment underfills the window."""
+    d_in, nh, conv_dim = _dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    b, s, _ = x.shape
+
+    zxbcdt = dense(p["in_proj"], x, role="in_proj")
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv_carry(p["conv_w"], p["conv_b"], xbc_raw, conv_carry)
+    xs = xbc[..., :d_in].reshape(b, s, nh, hd)
+    Bmat = xbc[..., d_in : d_in + n]
+    Cmat = xbc[..., d_in + n :]
+    xs = constrain(xs, ("batch", None, "ssm_heads", None))
+
+    A = -jnp.exp(p["A_log"]).astype(jnp.float32)
+    seg_len = jnp.asarray(seg_len, jnp.int32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    row = jnp.arange(s)[None, :, None]
+    dtv = jnp.where(row < seg_len, dtv, 0.0)
+    y, h_final = ssd_chunked(xs.astype(jnp.float32), dtv, A,
+                             Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                             cfg.ssm_chunk, h0=h0.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, role="out_proj")
+
+    ext = jnp.concatenate([conv_carry.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    new_carry = jax.lax.dynamic_slice(
+        ext, (jnp.int32(0), seg_len, jnp.int32(0)),
+        (b, cfg.conv_width - 1, conv_dim)).astype(jnp.float32)
+    return out, new_carry, h_final
+
+
 def mamba_init_state(cfg: ModelConfig, batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     d_in, nh, conv_dim = _dims(cfg)
     conv = jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32)
@@ -182,7 +267,7 @@ def mamba_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     n, hd = cfg.ssm_state, cfg.ssm_head_dim
     b = x.shape[0]
 
-    zxbcdt = dense(p["in_proj"], x)
+    zxbcdt = dense(p["in_proj"], x, role="in_proj")
     z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
     window = jnp.concatenate([conv_cache.astype(xbc_raw.dtype), xbc_raw], axis=1)
     xbc = jax.nn.silu(
@@ -202,4 +287,4 @@ def mamba_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     y = jnp.einsum("bhpn,bn->bhp", h, Cm) + xs * p["D"][:, None]
     y = y.reshape(b, 1, d_in).astype(x.dtype)
     y = rms_norm(p["norm"], y * jax.nn.silu(z))
-    return dense(p["out_proj"], y), new_conv, h
+    return dense(p["out_proj"], y, role="out_proj"), new_conv, h

@@ -474,6 +474,93 @@ class MambaLM:
         return logits, dict(cache, conv=convs, ssm=hs,
                             lengths=cache["lengths"] + 1)
 
+    # ------------------------------------------------- continuous serving
+    # Slot-pooled counterparts of DecoderLM's `prefill_packed_paged` /
+    # `decode_step_paged`: the per-request state (conv window + SSM state)
+    # is FIXED-SIZE, so instead of paged block tables each request owns one
+    # row of a (layers, num_slots, ...) pool and every index below is
+    # traced data — admission never compiles (see serve/statecache.py).
+
+    def prefill_chunk_slots(self, params: Params, conv_pool: jnp.ndarray,
+                            ssm_pool: jnp.ndarray, state_idx: jnp.ndarray,
+                            tokens: jnp.ndarray, seg_len: jnp.ndarray,
+                            seg_start: jnp.ndarray):
+        """One prompt segment against the slot-pooled state cache — the
+        prefill lane of the ssm unified serving step.
+
+        tokens: (1, C) holding the segment's rows at offset 0 (rows past
+        `seg_len` are padding — `mamba_chunk_forward` makes them exact
+        identities); `state_idx` the request's pool row; `seg_start` the
+        prompt offset of row 0.  seg_start == 0 selects ZERO carries
+        in-program instead of the pool row, so a freshly claimed slot needs
+        no zeroing pass (and no second executable).  Chunking a prompt in
+        C-token segments reproduces `prefill` bitwise provided C is a
+        multiple of `cfg.ssm_chunk` (the serve runtime rounds its chunk
+        width up to guarantee that).
+
+        Returns (logits (1, 1, V) at the segment's last real row, conv_pool,
+        ssm_pool)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        state_idx = jnp.asarray(state_idx, jnp.int32)
+        seg_len = jnp.asarray(seg_len, jnp.int32)
+        fresh = jnp.asarray(seg_start, jnp.int32) == 0
+
+        conv_c = conv_pool[:, state_idx]                 # (L, W-1, conv_dim)
+        ssm_c = ssm_pool[:, state_idx]                   # (L, nh, hd, n)
+        conv_c = jnp.where(fresh, jnp.zeros_like(conv_c), conv_c)
+        ssm_c = jnp.where(fresh, jnp.zeros_like(ssm_c), ssm_c)
+
+        def body(x, layer):
+            bp, cc, hc = layer
+            hin = _norm(cfg, bp["norm"], x)
+            y, cc, hc = M.mamba_chunk_forward(bp["mamba"], cfg, hin,
+                                              cc[None], hc[None], seg_len)
+            return x + y, (cc[0], hc[0])
+
+        x, (convs, hs) = runmode.layer_scan(
+            body, x, (params["blocks"], conv_c, ssm_c))
+        conv_pool = conv_pool.at[:, state_idx].set(convs)
+        ssm_pool = ssm_pool.at[:, state_idx].set(hs)
+        x = _norm(cfg, params["final_norm"], x)
+        last = jnp.clip(seg_len - 1, 0, x.shape[1] - 1)
+        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        logits = lm_head_logits(params["lm_head"], x_last)
+        return logits, conv_pool, ssm_pool
+
+    def decode_step_slots(self, params: Params, conv_pool: jnp.ndarray,
+                          ssm_pool: jnp.ndarray, state_idx: jnp.ndarray,
+                          tokens: jnp.ndarray):
+        """One decode token for every serving slot against the slot-pooled
+        state cache.  state_idx: (B,) pool rows — idle/prefilling slots
+        point at the NULL row 0, whose reads and colliding write-backs are
+        garbage by construction and never reach a real request's row.
+        tokens: (B, 1).  Returns (logits (B, 1, V), conv_pool, ssm_pool)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        state_idx = jnp.asarray(state_idx, jnp.int32)
+        conv = conv_pool[:, state_idx]                   # (L, B, W-1, conv)
+        ssm = ssm_pool[:, state_idx]                     # (L, B, nh, hd, n)
+
+        def body(x, layer):
+            bp, cv, h = layer
+            hin = _norm(cfg, bp["norm"], x)
+            y, cv, h = M.mamba_decode(bp["mamba"], cfg, hin, cv, h)
+            return x + y, (cv, h)
+
+        x, (convs, hs) = runmode.layer_scan(
+            body, x, (params["blocks"], conv, ssm))
+        conv_pool = conv_pool.at[:, state_idx].set(convs)
+        ssm_pool = ssm_pool.at[:, state_idx].set(hs)
+        x = _norm(cfg, params["final_norm"], x)
+        logits = lm_head_logits(params["lm_head"], x)
+        return logits, conv_pool, ssm_pool
+
+    @staticmethod
+    def slot_state_logical_axes():
+        return {"conv": ("layers", None, None, "conv_dim"),
+                "ssm": ("layers", None, "ssm_heads", None, "ssm_state")}
+
 
 # ===================================================================== Zamba2
 class HybridLM:

@@ -1,14 +1,27 @@
 from repro.serve.engine import FixedBatchEngine, Request, ServeConfig, ServeEngine
+from repro.serve.family import (
+    DecoderFamilyAdapter,
+    SSMFamilyAdapter,
+    resolve_family_adapter,
+)
 from repro.serve.kvcache import BlockAllocator, KVCacheConfig, PagedKVCache
 from repro.serve.metrics import ServeMetrics, percentile
 from repro.serve.router import (
     DEFAULT_CHUNK_TOKENS,
+    FAMILY_STAGES,
     PlanRouter,
     build_serve_graph,
     build_serve_plan,
+    serve_stages,
 )
 from repro.serve.runtime import ContinuousEngine, RuntimeConfig
-from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.scheduler import ContinuousScheduler, PagedCapacity, ServeRequest
+from repro.serve.statecache import (
+    SlotAllocator,
+    SlotCapacity,
+    SlotStateCache,
+    StateCacheConfig,
+)
 from repro.serve.trace import (
     NULL_RECORDER,
     TraceRecorder,
@@ -21,21 +34,31 @@ __all__ = [
     "ContinuousEngine",
     "DEFAULT_CHUNK_TOKENS",
     "ContinuousScheduler",
+    "DecoderFamilyAdapter",
+    "FAMILY_STAGES",
     "FixedBatchEngine",
     "KVCacheConfig",
     "NULL_RECORDER",
+    "PagedCapacity",
     "PagedKVCache",
     "PlanRouter",
     "Request",
     "RuntimeConfig",
+    "SSMFamilyAdapter",
     "ServeConfig",
     "ServeEngine",
     "ServeMetrics",
     "ServeRequest",
+    "SlotAllocator",
+    "SlotCapacity",
+    "SlotStateCache",
+    "StateCacheConfig",
     "TraceRecorder",
     "build_serve_graph",
     "build_serve_plan",
     "load_trace",
     "percentile",
+    "resolve_family_adapter",
+    "serve_stages",
     "write_trace",
 ]

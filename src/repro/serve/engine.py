@@ -1,17 +1,27 @@
-"""Serving engines.
+"""Serving engines (the pre-unified-step baselines).
 
 `FixedBatchEngine` is the original synchronous drain loop: fixed-size
-batches, left-padded prompts, every request in a batch decodes the full
+batches, left-padded prompts, a dedicated whole-prompt prefill program per
+prompt-length bucket, every request in a batch decoding the full
 `max_new_tokens`.  It remains as (a) the serving path for model families
-without a paged decode (mamba / hybrid / encdec state caches), and (b) the
-baseline the continuous-batching runtime is benchmarked against
-(`benchmarks/bench_serving.py`).
+the continuous runtime has no `FamilyAdapter` for (hybrid / encdec state
+caches — see `repro.serve.family`), and (b) the differential baseline the
+unified token-budget step is pinned against: `ContinuousEngine` must
+produce byte-identical greedy streams to this drain loop for BOTH adapter
+families (DecoderLM via the paged KV-cache, MambaLM via the slot-pooled
+state cache), which `benchmarks/bench_serving.py` and the serving tests
+exercise per family.
 
 `ServeEngine` keeps the historical API (`submit` / `run` / `stats` /
 `throughput`) as a thin compatibility wrapper: when the model exposes the
-paged decode path (DecoderLM families) and no modality extras are in play it
-delegates to `repro.serve.runtime.ContinuousEngine`; otherwise it falls back
-to the fixed-batch loop.
+paged decode path (DecoderLM families) and no modality extras are in play
+it delegates to `repro.serve.runtime.ContinuousEngine` — a family-agnostic
+orchestrator that resolves its per-family state handling (paged KV blocks
+vs fixed-size state slots) through the `FamilyAdapter` seam; otherwise it
+falls back to the fixed-batch loop.  Mamba2 continuous serving is opted
+into explicitly by constructing `ContinuousEngine` directly (or passing
+`--engine continuous --family ssm` to the bench), keeping this wrapper's
+historical routing stable.
 """
 
 from __future__ import annotations
@@ -45,7 +55,14 @@ class Request:
 
 
 class FixedBatchEngine:
-    """The original fixed-batch drain loop (baseline engine)."""
+    """The original fixed-batch drain loop (baseline engine).
+
+    Retraces a prefill program per prompt-length bucket and stalls every
+    slot for the batch's full `max_new_tokens` — exactly the costs the
+    unified token-budget step removes.  Kept as the byte-identical greedy
+    reference: at batch_size=1 its drain is the per-request ground truth
+    the continuous engine's streams are differentially pinned against for
+    both `FamilyAdapter` families."""
 
     def __init__(self, model, params, mesh, rules: ShardingRules,
                  cfg: ServeConfig, extras: Optional[Dict[str, Any]] = None):
@@ -131,8 +148,11 @@ class ServeEngine:
     """Compatibility wrapper: historical API over the continuous runtime.
 
     Models with a paged decode path are served by `ContinuousEngine`
-    (continuous batching + paged KV-cache); other families fall back to the
-    fixed-batch loop transparently."""
+    (continuous batching behind the `repro.serve.family` adapter seam);
+    other families fall back to the fixed-batch loop transparently.  The
+    routing predicate is deliberately unchanged by the family seam: ssm
+    continuous serving is an explicit `ContinuousEngine` construction, not
+    a silent rerouting of existing `ServeEngine` users."""
 
     def __init__(self, model, params, mesh, rules: ShardingRules,
                  cfg: ServeConfig, extras: Optional[Dict[str, Any]] = None):

@@ -1,0 +1,366 @@
+"""The engine/model-family seam: per-family adapters for continuous batching.
+
+`ContinuousEngine` (runtime.py) is family-AGNOSTIC orchestration — admit,
+schedule, grow-or-preempt, dispatch, retire — over an abstract notion of
+"the family's per-request device state".  Everything that knows WHAT that
+state is lives here, behind one adapter object per model family:
+
+  * `DecoderFamilyAdapter` — the paged-KV family (attention decoders).
+    Per-request state is a growing set of KV blocks: the adapter owns the
+    `PagedKVCache`, the block-table bookkeeping, and the paged step
+    programs (`jit_unified_step` / `jit_decode_only_step` /
+    `jit_commit_prefill`).  This is a verbatim relocation of the logic the
+    engine used to inline — same programs, same shapes, same call order —
+    so carving the seam is a provable no-op: byte-identical token streams
+    and the same two step executables.
+
+  * `SSMFamilyAdapter` — the state-cache family (`zoo.MambaLM`).
+    Per-request state is FIXED-SIZE (one depthwise-conv window plus one
+    SSM state per layer), so the paged machinery collapses: the pool is a
+    `SlotStateCache` grid of state rows, the "block table" degenerates to
+    one traced row index per slot, growth is a no-op, and the footprint is
+    claimed lazily when the request's first prompt chunk dispatches
+    (`claim_chunk`) — which is how a state pool smaller than the slot
+    count drives the engine's ordinary preemption path.
+
+The adapter protocol (duck-typed; both classes implement it):
+
+    family              str tag stamped on metrics and trace events
+    chunk_width         the prefill lane's resolved token width
+    chunk_segments      segments one chunk may pack (ssm: always 1)
+    cache               the family's device-state container (swap buffers)
+    alloc               its allocator (trace binding, occupancy, invariants)
+    capacity()          the scheduler's capacity-seam object
+    victim_eligible     predicate narrowing preemption victims (or None)
+    grow_for_decode(req, need_rows) -> bool   cover the next decode write
+    claim_chunk(req) -> bool                  cover a prompt chunk dispatch
+    swap_out(rid) -> nbytes                   device state -> host buffer
+    resume_commit(req) -> nbytes              host buffer -> device state
+    dispatch(params, dec_rids, lengths, last_tok, chunks)
+                        -> (next_tokens (slots,), seg_next | None)
+
+The engine reads `_unified` / `_decode_only` / `_commit` off the adapter
+for compile-count accounting (each is a jitted program whose
+`_cache_size()` pins the exactly-two-executables property).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, prune_for_mesh
+from repro.launch.steps import (
+    jit_commit_prefill,
+    jit_decode_only_step,
+    jit_ssm_commit_state,
+    jit_ssm_decode_only_step,
+    jit_ssm_unified_step,
+    jit_unified_step,
+    paged_pool_sharding,
+    slot_state_shardings,
+)
+from repro.serve.kvcache import NULL_BLOCK, PagedKVCache
+from repro.serve.router import PlanRouter, serve_stages
+from repro.serve.scheduler import PagedCapacity, ServeRequest
+from repro.serve.statecache import SlotStateCache, SlotCapacity
+
+
+def resolve_family_adapter(model):
+    """The adapter class serving `model`, by capability probe: the ssm
+    slot-pooled entry points first (`decode_step_slots`), then the paged
+    decode path.  Raises TypeError for families with neither — they serve
+    through the fixed-batch `ServeEngine`."""
+    if getattr(model.cfg, "family", None) == "ssm" and hasattr(
+            model, "decode_step_slots"):
+        return SSMFamilyAdapter
+    if hasattr(model, "decode_step_paged"):
+        return DecoderFamilyAdapter
+    raise TypeError(
+        f"{type(model).__name__} has no paged decode path; use the "
+        "fixed-batch ServeEngine for this family")
+
+
+class DecoderFamilyAdapter:
+    """Paged-KV family: block-table bookkeeping + the paged step programs."""
+
+    family = "decoder"
+
+    def __init__(self, model, mesh, rules: ShardingRules, cfg,
+                 router: PlanRouter):
+        mcfg = model.cfg
+        self.kv_cfg = cfg.kv_config()
+        self.cache = PagedKVCache(self.kv_cfg, mcfg.n_layers, mcfg.n_kv_heads,
+                                  mcfg.hd, jnp.dtype(mcfg.dtype))
+        # fixed prefill-lane geometry: the step's prompt-token budget and
+        # the packed-segment descriptor height, both compiled in.  The
+        # height is the EFFECTIVE packing width — cfg.chunk_segments
+        # narrowed by the plan's tuned `max_segments` (old Pallas plans,
+        # tuned before the segmented kernel existed, narrow it to 1) — so
+        # the segmented kernel's grid is exactly as tall as the packing
+        # the scheduler will actually do: the tuned knob sizes the grid,
+        # it doesn't just throttle host-side packing under a wider one.
+        self.chunk_width = cfg.chunk_width
+        self.chunk_segments = max(1, min(
+            cfg.chunk_segments,
+            router.chunk_segments(default=cfg.chunk_segments)))
+        # THE two compiled step programs: the unified step carrying the
+        # decode batch plus one packed prompt chunk, and the decode-only
+        # fast path for steps with no prompt work (the unified program's
+        # chunk lane executes at its compiled width even when idle, so
+        # skipping it is a dispatch decision, not a mask).  Attention
+        # backends and per-stage matmul lane tables come from the plan's
+        # stage choices (decode + the prefill_chunk stage), closed over at
+        # trace time — dispatch never recompiles mid-serve, and admission
+        # compiles nothing at all.
+        decode_backend, _ = router.attention_backend("decode")
+        chunk_backend, chunk_config = router.attention_backend(
+            "prefill_chunk")
+        self._unified = jit_unified_step(
+            model, mesh, rules,
+            decode_attn_backend=decode_backend,
+            chunk_attn_backend=chunk_backend,
+            chunk_attn_config=chunk_config,
+            decode_matmul_table=router.matmul_table("decode"),
+            chunk_matmul_table=router.matmul_table("prefill_chunk"),
+            interpret=cfg.interpret)
+        self._decode_only = jit_decode_only_step(
+            model, mesh, rules,
+            decode_attn_backend=decode_backend,
+            decode_matmul_table=router.matmul_table("decode"),
+            interpret=cfg.interpret)
+        # resume-only commit (swap-in scatter); single full-width shape
+        self._commit = jit_commit_prefill(model, mesh, rules)
+        # commit the fresh pools to their serving sharding up front: the
+        # unified program's donated pool arguments then carry the SAME
+        # sharding on the very first step as on every later one, so exactly
+        # one executable ever builds (an uncommitted first call would
+        # compile a second, layout-shifted copy of the program)
+        pool_shard = paged_pool_sharding(model, mesh,
+                                         prune_for_mesh(rules, mesh))
+        self.cache.k = jax.device_put(self.cache.k, pool_shard)
+        self.cache.v = jax.device_put(self.cache.v, pool_shard)
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def alloc(self):
+        return self.cache.alloc
+
+    def capacity(self) -> PagedCapacity:
+        return PagedCapacity(self.kv_cfg, self.cache.alloc)
+
+    # every resident holds blocks from admission: any victim frees capacity
+    victim_eligible = None
+
+    def grow_for_decode(self, req: ServeRequest, need_rows: int) -> bool:
+        """Extend req's block table to cover its next decode write; False
+        when the pool is dry (the engine preempts a victim and retries)."""
+        return self.cache.alloc.extend(req.rid, need_rows)
+
+    def claim_chunk(self, req: ServeRequest) -> bool:
+        # admission already allocated the prompt's blocks — nothing lazy
+        return True
+
+    # ------------------------------------------------------------- swapping
+    def is_swapped(self, rid: int) -> bool:
+        return self.cache.is_swapped(rid)
+
+    def swap_out(self, rid: int) -> int:
+        return self.cache.swap_out(rid)
+
+    def resume_commit(self, req: ServeRequest) -> int:
+        """Swap a re-admitted request's KV back in: scatter the host buffer
+        into the freshly allocated blocks via the jitted commit program,
+        always padded to the FULL table width (padding ids point at the
+        null sink) so exactly one commit shape ever traces."""
+        k_host, v_host = self.cache.take_swapped(req.rid)
+        nbytes = k_host.nbytes + v_host.nbytes   # before table padding
+        table = self.cache.alloc.tables[req.rid]
+        nb = k_host.shape[1]
+        assert nb == len(table)
+        bs = self.kv_cfg.block_size
+        nb_pad = self.kv_cfg.max_blocks_per_seq
+        ids = np.full((nb_pad,), NULL_BLOCK, np.int32)
+        ids[:nb] = table
+        if nb_pad > nb:
+            pad = np.zeros(k_host.shape[:1] + (nb_pad - nb,)
+                           + k_host.shape[2:], k_host.dtype)
+            k_host = np.concatenate([k_host, pad], axis=1)
+            v_host = np.concatenate([v_host, pad], axis=1)
+        L = k_host.shape[0]
+        ks = jnp.asarray(k_host.reshape(L, 1, nb_pad * bs, *k_host.shape[3:]))
+        vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
+        self.cache.k, self.cache.v = self._commit(
+            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+        return nbytes
+
+    # ------------------------------------------------------------- dispatch
+    def _chunk_inputs(self, chunks: List[Tuple[ServeRequest, int, int]]):
+        """Host-side prefill-lane arrays for a packed chunk: the segments'
+        prompt slices concatenated from row 0 (fixed `chunk_width`,
+        zero-padded), each segment's block table, and the (S, 3) descriptor
+        array [row_offset, seg_len, kv_start].  Idle segment slots carry
+        seg_len 0 with an all-null table (their row_offset sits at the fill
+        level so offsets stay monotone; padding rows divert to the sink)."""
+        c = self.chunk_width
+        ns = self.chunk_segments
+        toks = np.zeros((1, c), np.int32)
+        tables = np.full((ns, self.kv_cfg.max_blocks_per_seq),
+                         NULL_BLOCK, np.int32)
+        info = np.zeros((ns, 3), np.int32)
+        q0 = 0
+        for i, (req, start, n) in enumerate(chunks):
+            toks[0, q0:q0 + n] = req.prompt[start:start + n]
+            held = self.cache.alloc.tables[req.rid]
+            tables[i, :len(held)] = held
+            info[i] = (q0, n, start)
+            q0 += n
+        info[len(chunks):, 0] = q0            # idle slots: empty span at fill
+        return toks, tables, info
+
+    def dispatch(self, params, dec_rids: List[Optional[int]],
+                 lengths: np.ndarray, last_tok: np.ndarray,
+                 chunks: List[Tuple[ServeRequest, int, int]]):
+        """Run ONE step program invocation: the unified step when `chunks`
+        carries prompt work, else the decode-only fast path.  Returns the
+        decode lane's next tokens (host, (slots,)) and the chunk segments'
+        next-token samples ((segments,) or None)."""
+        bt = jnp.asarray(self.cache.table_array(dec_rids))
+        lens = jnp.asarray(lengths)
+        tokens = jnp.asarray(last_tok[:, None])
+        if chunks:
+            ch_toks, seg_tables, seg_info = self._chunk_inputs(chunks)
+            nxt_dev, seg_next_dev, self.cache.k, self.cache.v = self._unified(
+                params, self.cache.k, self.cache.v, bt, lens, tokens,
+                jnp.asarray(ch_toks), jnp.asarray(seg_tables),
+                jnp.asarray(seg_info))
+            nxt = np.asarray(nxt_dev, np.int32)
+            return nxt, np.asarray(seg_next_dev, np.int32)
+        # decode-only fast path: no prompt work pending, so the step
+        # skips the chunk-wide forward instead of masking it
+        nxt_dev, self.cache.k, self.cache.v = self._decode_only(
+            params, self.cache.k, self.cache.v, bt, lens, tokens)
+        return np.asarray(nxt_dev, np.int32), None
+
+    def occupancy(self) -> float:
+        return self.cache.alloc.occupancy()
+
+
+class SSMFamilyAdapter:
+    """State-cache family: slot-pooled conv/SSM state + the ssm programs.
+
+    Chunk geometry: the lane width is `cfg.chunk_width` rounded UP to a
+    multiple of the model's SSD scan block (`cfg.ssm_chunk`) so every
+    non-final prompt chunk splits the scan exactly on a block boundary —
+    the condition under which chunked prefill is bitwise identical to the
+    fixed-batch whole-prompt prefill.  Packing is 1: the SSD recurrence
+    threads ONE request's carry through the lane, so segments cannot
+    share it the way disjoint paged block-tables can."""
+
+    family = "ssm"
+
+    def __init__(self, model, mesh, rules: ShardingRules, cfg,
+                 router: PlanRouter):
+        mcfg = model.cfg
+        q = max(1, mcfg.ssm_chunk)
+        self.chunk_width = -(-cfg.chunk_width // q) * q
+        self.chunk_segments = 1
+        self.state_cfg = cfg.state_config()
+        self.cache = SlotStateCache.for_model(self.state_cfg, mcfg)
+        chunk_stage, decode_stage = "ssm_prefill_chunk", "ssm_decode"
+        assert chunk_stage in serve_stages(self.family)
+        self._unified = jit_ssm_unified_step(
+            model, mesh, rules,
+            decode_matmul_table=router.matmul_table(decode_stage),
+            chunk_matmul_table=router.matmul_table(chunk_stage),
+            interpret=cfg.interpret)
+        self._decode_only = jit_ssm_decode_only_step(
+            model, mesh, rules,
+            decode_matmul_table=router.matmul_table(decode_stage),
+            interpret=cfg.interpret)
+        self._commit = jit_ssm_commit_state(model, mesh, rules)
+        conv_shard, ssm_shard = slot_state_shardings(
+            model, mesh, prune_for_mesh(rules, mesh))
+        self.cache.conv = jax.device_put(self.cache.conv, conv_shard)
+        self.cache.ssm = jax.device_put(self.cache.ssm, ssm_shard)
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def alloc(self):
+        return self.cache.alloc
+
+    def capacity(self) -> SlotCapacity:
+        return SlotCapacity(self.cache.alloc)
+
+    @property
+    def victim_eligible(self):
+        # fresh admission reserves nothing, so a resident that has not yet
+        # dispatched its first chunk owns no state row — evicting it frees
+        # no capacity.  Narrow victims to actual row holders.
+        return lambda r: self.cache.alloc.holds(r.rid)
+
+    def grow_for_decode(self, req: ServeRequest, need_rows: int) -> bool:
+        # fixed-size state: nothing grows during decode
+        return True
+
+    def claim_chunk(self, req: ServeRequest) -> bool:
+        """Lazily claim req's state row at first-chunk dispatch; False when
+        the pool is dry (the engine preempts a row holder and retries)."""
+        if self.cache.alloc.holds(req.rid):
+            return True
+        if not self.cache.alloc.can_allocate(1):
+            return False
+        self.cache.alloc.allocate(req.rid)
+        return True
+
+    # ------------------------------------------------------------- swapping
+    def is_swapped(self, rid: int) -> bool:
+        return self.cache.is_swapped(rid)
+
+    def swap_out(self, rid: int) -> int:
+        return self.cache.swap_out(rid)
+
+    def resume_commit(self, req: ServeRequest) -> int:
+        """Scatter a re-admitted request's host-side (conv, ssm) state into
+        its freshly claimed pool row via the jitted commit program.  The
+        row index is traced data — one shape ever traces."""
+        conv_host, ssm_host = self.cache.take_swapped(req.rid)
+        nbytes = conv_host.nbytes + ssm_host.nbytes
+        row = self.cache.alloc.slot_of(req.rid)
+        self.cache.conv, self.cache.ssm = self._commit(
+            self.cache.conv, self.cache.ssm, jnp.asarray(conv_host),
+            jnp.asarray(ssm_host), np.int32(row))
+        return nbytes
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(self, params, dec_rids: List[Optional[int]],
+                 lengths: np.ndarray, last_tok: np.ndarray,
+                 chunks: List[Tuple[ServeRequest, int, int]]):
+        """One ssm step program invocation.  The decode lane maps each slot
+        to its state row (`index_array`; idle/prefilling slots hit the null
+        row); the chunk lane carries at most ONE segment (packing width 1).
+        Traced scalars go in as strongly-typed np.int32 so the weak-typed
+        Python-int path can never trace a second executable."""
+        state_idx = jnp.asarray(self.cache.index_array(dec_rids))
+        tokens = jnp.asarray(last_tok[:, None])
+        if chunks:
+            req, start, n = chunks[0]
+            ch_toks = np.zeros((1, self.chunk_width), np.int32)
+            ch_toks[0, :n] = req.prompt[start:start + n]
+            row = self.cache.alloc.slot_of(req.rid)
+            nxt_dev, ch_next_dev, self.cache.conv, self.cache.ssm = \
+                self._unified(
+                    params, self.cache.conv, self.cache.ssm, state_idx,
+                    tokens, jnp.asarray(ch_toks), np.int32(row),
+                    np.int32(n), np.int32(start))
+            nxt = np.asarray(nxt_dev, np.int32)
+            return nxt, np.asarray(ch_next_dev, np.int32).reshape(1)
+        nxt_dev, self.cache.conv, self.cache.ssm = self._decode_only(
+            params, self.cache.conv, self.cache.ssm, state_idx, tokens)
+        return np.asarray(nxt_dev, np.int32), None
+
+    def occupancy(self) -> float:
+        return self.cache.alloc.occupancy()

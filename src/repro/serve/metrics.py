@@ -28,6 +28,11 @@ def percentile(values: List[float], p: float) -> float:
 
 @dataclasses.dataclass
 class ServeMetrics:
+    # which model family served these requests ("decoder" | "ssm"): set by
+    # the engine from its FamilyAdapter, embedded in trace snapshots so an
+    # audit knows which step taxonomy to expect.  Kept out of `summary()`,
+    # which is a flat float dict feeding CSV benches.
+    family: str = "decoder"
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     ttfts_s: List[float] = dataclasses.field(default_factory=list)
     tokens_out: int = 0

@@ -42,7 +42,25 @@ from repro.core.plan import InferencePlan, OpChoice
 from repro.core.selection import select
 from repro.core.search.tuner import Tuner
 
-STAGES = ("prefill", "decode", "prefill_chunk")
+# Stage-qualified serve stages, per model family.  The decoder family's
+# three stages are the original serve graph; the ssm (state-cache) family
+# has no attention op and a different matmul role set (in_proj / out_proj /
+# lm_head — see repro.models.mamba), so its stages are distinct nodes and a
+# plan may tune both families side by side.
+FAMILY_STAGES = {
+    "decoder": ("prefill", "decode", "prefill_chunk"),
+    "ssm": ("ssm_prefill_chunk", "ssm_decode"),
+}
+STAGES = FAMILY_STAGES["decoder"] + FAMILY_STAGES["ssm"]
+
+# The model's routable matmul roles per family (the decoder's canonical
+# four live in kernels.dispatch.MATMUL_ROLES).
+SSM_MATMUL_ROLES = ("in_proj", "out_proj", "lm_head")
+
+
+def serve_stages(family: str):
+    """The serve-plan stages a family's engine dispatches through."""
+    return FAMILY_STAGES.get(family, FAMILY_STAGES["decoder"])
 
 # The unified step's default per-step prompt-token budget.  This is THE
 # canonical constant: `RuntimeConfig.chunk_tokens` defaults to it and
@@ -52,9 +70,54 @@ STAGES = ("prefill", "decode", "prefill_chunk")
 DEFAULT_CHUNK_TOKENS = 32
 
 
+def _build_ssm_serve_graph(cfg: ModelConfig, *, slots: int,
+                           chunk_tokens: Optional[int],
+                           dtype: str) -> Graph:
+    """The ssm family's serve-time operator set: no attention op — the SSD
+    scan is not a raced template (yet) — but the projections dominate the
+    matmul time and are raced per stage at the shapes the slot-pooled step
+    programs actually run (a chunk-wide prefill segment vs a slots-wide
+    single-token decode).  The chunk width is rounded UP to a multiple of
+    `cfg.ssm_chunk`, mirroring `SSMFamilyAdapter`'s resolved lane width."""
+    g = Graph("serve_ssm")
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_head_dim
+    proj = 2 * d_in + 2 * cfg.ssm_state + nh
+    q = max(1, cfg.ssm_chunk)
+    ct = min(chunk_tokens or DEFAULT_CHUNK_TOKENS, 4096)
+    ct = -(-ct // q) * q
+
+    xc = g.add_input("x_ssm_chunk", (1, ct, d), dtype)
+    wi = g.add_input("w_in_proj", (d, proj), dtype)
+    in_c = g.add_node("matmul", [xc, wi], (1, ct, proj), out_dtype=dtype,
+                      name="ssm_prefill_chunk.in_proj")
+    yc = g.add_input("y_ssm_chunk", (1, ct, d_in), dtype)
+    wo = g.add_input("w_out_proj", (d_in, d), dtype)
+    out_c = g.add_node("matmul", [yc, wo], (1, ct, d), out_dtype=dtype,
+                       name="ssm_prefill_chunk.out_proj")
+    wl = g.add_input("w_lm_ssm", (d, cfg.vocab), dtype)
+    xl = g.add_input("x_ssm_last", (1, 1, d), dtype)
+    lm_c = g.add_node("matmul", [xl, wl], (1, 1, cfg.vocab), out_dtype=dtype,
+                      name="ssm_prefill_chunk.lm_head")
+
+    xd = g.add_input("x_ssm_decode", (slots, 1, d), dtype)
+    in_d = g.add_node("matmul", [xd, wi], (slots, 1, proj), out_dtype=dtype,
+                      name="ssm_decode.in_proj")
+    yd = g.add_input("y_ssm_decode", (slots, 1, d_in), dtype)
+    out_d = g.add_node("matmul", [yd, wo], (slots, 1, d), out_dtype=dtype,
+                       name="ssm_decode.out_proj")
+    lm_d = g.add_node("matmul", [xd, wl], (slots, 1, cfg.vocab),
+                      out_dtype=dtype, name="ssm_decode.lm_head")
+
+    g.set_outputs([in_c, out_c, lm_c, in_d, out_d, lm_d])
+    return g
+
+
 def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
                       max_seq: int, chunk_tokens: Optional[int] = None,
-                      dtype: str = "float32") -> Graph:
+                      dtype: str = "float32",
+                      family: str = "decoder") -> Graph:
     """The serve-time operator set as a Graph with stage-qualified names.
 
     `chunk_tokens` is the unified step's per-step prompt-token budget (the
@@ -63,7 +126,13 @@ def build_serve_graph(cfg: ModelConfig, *, prefill_len: int, slots: int,
     the shape it actually runs (in particular, an unchunked baseline
     engine, RuntimeConfig.chunk_tokens=None, runs a max_seq-wide lane).
     None here falls back to the RuntimeConfig field's default budget
-    (32), matching an engine built with a default RuntimeConfig."""
+    (32), matching an engine built with a default RuntimeConfig.
+
+    `family="ssm"` builds the state-cache family's stage set instead
+    (`ssm_prefill_chunk` / `ssm_decode`; see `FAMILY_STAGES`)."""
+    if family == "ssm":
+        return _build_ssm_serve_graph(cfg, slots=slots,
+                                      chunk_tokens=chunk_tokens, dtype=dtype)
     g = Graph("serve")
     d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
     # RuntimeConfig.chunk_tokens defaults to the same shared constant, so
@@ -135,14 +204,15 @@ def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
                      max_seq: int, chunk_tokens: Optional[int] = None,
                      chip: hw.Chip = hw.TPU_V5E,
                      tuner: Optional[Tuner] = None,
-                     dtype: str = "bfloat16") -> InferencePlan:
+                     dtype: str = "bfloat16",
+                     family: str = "decoder") -> InferencePlan:
     """Tune the serve graph and return its stage-qualified InferencePlan."""
     # dtype forwarded so the graph's tensors carry the width the plan is
     # tuned for (dtype-sensitive validation/cost modelling sees bf16, not a
     # float32 default that never matches the plan).
     g = build_serve_graph(cfg, prefill_len=prefill_len, slots=slots,
                           max_seq=max_seq, chunk_tokens=chunk_tokens,
-                          dtype=dtype)
+                          dtype=dtype, family=family)
     return select(g, tuner=tuner, chip=chip, dtype=dtype)
 
 
@@ -215,9 +285,11 @@ class PlanRouter:
     def matmul_table(self, stage: str) -> Dict[str, Tuple[str, Dict[str, Any]]]:
         """Every stage matmul's (backend, config) keyed by role — the
         dispatch table `kernels.dispatch.matmul_dispatch` installs around
-        the stage's jitted program."""
+        the stage's jitted program.  ssm stages use the ssm family's role
+        set (there is no qkv/mlp in a Mamba block)."""
         from repro.kernels.dispatch import MATMUL_ROLES
-        return {role: self.matmul_config(stage, role) for role in MATMUL_ROLES}
+        roles = SSM_MATMUL_ROLES if stage.startswith("ssm_") else MATMUL_ROLES
+        return {role: self.matmul_config(stage, role) for role in roles}
 
     def describe(self) -> Dict[str, str]:
         """Stage-qualified op -> chosen backend (for logs and benches)."""

@@ -3,46 +3,63 @@
 Request lifecycle under the UNIFIED TOKEN-BUDGET STEP:
 
     submit() -> waiting -> [scheduler admits into a free slot if the
-                PROMPT fits the free pool — not prompt+budget; admission
+                family's capacity model accepts the request — admission
                 itself runs no program]
              -> chunked prefill: each engine step packs up to
                 `chunk_tokens` of pending prompt work — prompt SEGMENTS
                 from up to `chunk_segments` requests, oldest admission
                 first, greedy fill — into the step's prefill lane,
-                committing each segment's KV into its own request's paged
-                blocks in-program, chunk by chunk, while the decode lane
-                advances EVERY in-flight request in the same compiled
-                program (a long prompt never stalls the decode batch, and
-                short prompts no longer waste the budget's tail)
+                committing each segment's per-request state (paged KV
+                blocks, or a slot-pooled conv/SSM state row) in-program,
+                chunk by chunk, while the decode lane advances EVERY
+                in-flight request in the same compiled program (a long
+                prompt never stalls the decode batch, and short prompts no
+                longer waste the budget's tail)
              -> the chunk that completes the prompt also samples the first
                 token (TTFT spans all of the prompt's chunks)
              -> joins the decode batch the NEXT step; greedy decode, one
-                token per engine step; KV blocks grow ON DEMAND
-                (`BlockAllocator.extend`, one block as each boundary is
-                crossed); retiring on eos/max_new -> blocks + slot freed,
-                metrics recorded.
+                token per engine step; per-request state grows on demand
+                where the family's state grows at all; retiring on
+                eos/max_new -> capacity + slot freed, metrics recorded.
 
-One engine step = ONE invocation of one of exactly TWO jitted programs:
-`jit_unified_step` (packed prefill lane + decode lane) when prompt work is
-pending, `jit_decode_only_step` (the decode lane alone) when none is — the
-unified program's chunk lane executes at its compiled width even when
-idle, so chunk-less steps skip it entirely instead of masking it.  Both
-programs' shapes are static in (slots, pool blocks, table width, chunk
-budget, segment slots): admission, chunk packing, retirement, preemption
-and resume are all pure data updates.  Each program compiles exactly once
-— the power-of-two prefill-bucket ladder of the old two-program runtime is
-gone entirely, and with it every admission-time compile.
+THE ENGINE IS FAMILY-AGNOSTIC.  Everything that knows what a family's
+per-request device state *is* lives behind a `FamilyAdapter`
+(`repro.serve.family`): the paged KV-cache, block tables and paged step
+programs for attention decoders (`DecoderFamilyAdapter`); the fixed-size
+slot-pooled conv/SSM state and its step programs for `MambaLM`
+(`SSMFamilyAdapter`).  The engine's `step()` is pure orchestration —
 
-Under pool pressure the grow path preempts: when a request cannot extend,
-the scheduler's victim (LIFO by admission, preferring the most remaining
-budget) has its KV swapped out to a host buffer, its slot and blocks are
-released, and it joins the resume queue.  Mid-prefill requests preempt the
-same way — `ServeRequest.prefilled` rides along, so a resumed request
-continues its prompt at the next uncommitted token.  Resume re-admits
-ahead of new arrivals and scatters the saved KV back through the jitted
-commit program, always padded to the full table width, so exactly one
-commit shape ever traces.  No token is recomputed and the unified program
-never recompiles (preemption only edits block-table *data*).
+    admit -> schedule chunk -> grow-or-preempt -> dispatch -> retire
+
+— and every family-specific question routes through the adapter:
+`grow_for_decode` (cover the next decode write), `claim_chunk` (cover a
+prompt chunk dispatch; the ssm family claims its state row lazily here),
+`swap_out`/`resume_commit` (preemption transport), `dispatch` (the one
+step-program invocation), `victim_eligible` (narrow preemption victims to
+requests whose eviction frees capacity).  Likewise the scheduler consults
+the adapter's capacity object (`scheduler.PagedCapacity` /
+`statecache.SlotCapacity`) for all admission/footprint arithmetic.
+
+One engine step = ONE invocation of one of exactly TWO jitted programs per
+family: the unified step (packed prefill lane + decode lane) when prompt
+work is pending, the decode-only fast path when none is — the unified
+program's chunk lane executes at its compiled width even when idle, so
+chunk-less steps skip it entirely instead of masking it.  Both programs'
+shapes are static in (slots, pool size, table/index width, chunk budget,
+segment slots): admission, chunk packing, retirement, preemption and
+resume are all pure data updates.  Each program compiles exactly once.
+
+Under pool pressure the grow path preempts: when a request cannot extend
+(paged family) or claim its first-chunk state row (ssm family), the
+scheduler's victim (LIFO by admission, preferring the most remaining
+budget, narrowed to capacity holders) has its state swapped out to a host
+buffer, its slot and capacity are released, and it joins the resume queue.
+Mid-prefill requests preempt the same way — `ServeRequest.prefilled` rides
+along, so a resumed request continues its prompt at the next uncommitted
+token.  Resume re-admits ahead of new arrivals and scatters the saved
+state back through the family's jitted commit program at one fixed shape.
+No token is recomputed and the step programs never recompile (preemption
+only edits index *data*).
 
 Key properties the fixed-batch `ServeEngine` lacks:
 
@@ -54,54 +71,49 @@ Key properties the fixed-batch `ServeEngine` lacks:
   * short prompts are PACKED: one step's chunk carries segments from up to
     `chunk_segments` requests (greedy fill, oldest admission first), so a
     burst of small prompts fills the budget the head request leaves idle
-    instead of spending one step each;
-  * no cross-request padding: per-slot lengths/block-tables mean a 12-token
-    prompt next to a 200-token prompt costs 12 tokens of KV;
+    instead of spending one step each (the ssm family's packing width is
+    1: the SSD recurrence threads one request's carry through the lane);
+  * no cross-request padding: per-slot lengths/indices mean a 12-token
+    prompt next to a 200-token prompt costs 12 tokens of state;
   * exactly TWO compiled programs serve every step (static slot/pool/chunk
     shapes; the decode-only variant skips the idle chunk lane); admission
     compiles nothing, ever;
-  * the tuned `InferencePlan` drives dispatch: the decode and chunked-
-    prefill attention backends AND every stage matmul (qkv_proj / mlp_up /
-    mlp_down / lm_head) are chosen separately by `PlanRouter` from a
-    stage-qualified serve plan — the chunk lane has its own
-    `prefill_chunk` stage whose attention config tunes the paged prefill
-    kernel's `block_q` (see `repro.serve.router`, `repro.kernels.dispatch`).
+  * the tuned `InferencePlan` drives dispatch per family: stage-qualified
+    choices (`decode` / `prefill_chunk` for decoders, `ssm_decode` /
+    `ssm_prefill_chunk` for the state-cache family) pick each lane's
+    attention backend and matmul tables separately (see
+    `repro.serve.router`, `repro.kernels.dispatch`).
 
 The engine clock is injectable (`now_fn`) so benchmarks can replay Poisson
 arrival traces in wall time or virtual time with identical scheduling.
 
 Passing a `repro.serve.trace.TraceRecorder` as `trace=` records every
 scheduler / allocator / step decision as a typed event on the engine clock
-(admission, chunk packing, preemption and swap, block accounting, step
-dispatch with lane fill and device time, program compiles).  The recorder
-threads through the scheduler and the block allocator, exports to
-Chrome-trace-event JSON for `ui.perfetto.dev`, and feeds the trace audit
-(`repro.serve.traceview`).  Disabled — the default — every emission site
-holds the no-op recorder, so serving costs one attribute lookup per site
-and the per-token loops skip even that via the `enabled` flag.
+(admission, chunk packing, preemption and swap, pool accounting, step
+dispatch with lane fill and device time, program compiles), each stamped
+with the serving family.  The recorder threads through the scheduler and
+the family's allocator, exports to Chrome-trace-event JSON for
+`ui.perfetto.dev`, and feeds the trace audit (`repro.serve.traceview`).
+Disabled — the default — every emission site holds the no-op recorder, so
+serving costs one attribute lookup per site and the per-token loops skip
+even that via the `enabled` flag.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import ShardingRules, prune_for_mesh
-from repro.launch.steps import (
-    jit_commit_prefill,
-    jit_decode_only_step,
-    jit_unified_step,
-    paged_pool_sharding,
-)
-from repro.serve.kvcache import NULL_BLOCK, KVCacheConfig, PagedKVCache
+from repro.distributed.sharding import ShardingRules
+from repro.serve.family import resolve_family_adapter
+from repro.serve.kvcache import KVCacheConfig
 from repro.serve.metrics import ServeMetrics
 from repro.serve.router import DEFAULT_CHUNK_TOKENS, PlanRouter
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.statecache import StateCacheConfig
 from repro.serve.trace import NULL_RECORDER, TraceRecorder
 
 
@@ -125,6 +137,9 @@ class RuntimeConfig:
     # only ever paid when (and as fully as) prompt work exists.  The
     # default is the shared `router.DEFAULT_CHUNK_TOKENS` so the engine
     # and an untuned serve plan can't drift onto different chunk shapes.
+    # (The ssm family rounds the resolved width UP to a multiple of the
+    # model's `ssm_chunk` so chunk boundaries split the SSD scan exactly
+    # on block boundaries — see `family.SSMFamilyAdapter`.)
     chunk_tokens: Optional[int] = DEFAULT_CHUNK_TOKENS
     # prompt segments one step's chunk may pack.  Greedy fill means a step
     # carries min(chunk_segments, prefilling requests) segments; 1 restores
@@ -135,6 +150,12 @@ class RuntimeConfig:
     # kernel's compiled descriptor height, so the tuned knob sizes the
     # block_q x max-segments grid itself.
     chunk_segments: int = 4
+    # state-slot pool rows for the slot-pooled (ssm) family, INCLUDING the
+    # reserved null row.  None = max_slots + 1 (every slot can hold state
+    # simultaneously — no state-pool preemption).  Smaller pools force the
+    # ordinary grow-or-preempt path at first-chunk claim time.  Ignored by
+    # the paged family.
+    state_slots: Optional[int] = None
     interpret: bool = True            # False: compile Pallas lanes on real TPU
 
     @property
@@ -156,18 +177,25 @@ class RuntimeConfig:
         return KVCacheConfig(num_blocks=nb, block_size=self.block_size,
                              max_blocks_per_seq=self.max_blocks_per_seq)
 
+    def state_config(self) -> StateCacheConfig:
+        ns = self.state_slots
+        if ns is None:
+            ns = self.max_slots + 1
+        return StateCacheConfig(num_slots=ns)
+
 
 class ContinuousEngine:
-    """Slot-based continuous-batching engine over the paged KV-cache."""
+    """Slot-based continuous-batching engine over a family state cache."""
+
+    # family-owned attributes tests and tools read off the engine; resolved
+    # through the adapter so the seam stays invisible to existing callers
+    _ADAPTER_ATTRS = ("_unified", "_decode_only", "_commit", "cache",
+                      "kv_cfg")
 
     def __init__(self, model, params, mesh, rules: ShardingRules,
                  cfg: RuntimeConfig, router: Optional[PlanRouter] = None,
                  now_fn: Optional[Callable[[], float]] = None,
                  trace: Optional[TraceRecorder] = None):
-        if not hasattr(model, "decode_step_paged"):
-            raise TypeError(
-                f"{type(model).__name__} has no paged decode path; use the "
-                "fixed-batch ServeEngine for this family")
         self.model = model
         self.params = params
         self.mesh = mesh
@@ -176,78 +204,43 @@ class ContinuousEngine:
         self.router = router or PlanRouter(None)
         self.now_fn = now_fn or time.perf_counter
         # structured event tracing (`repro.serve.trace`): the recorder is
-        # threaded through the scheduler and the block allocator so every
-        # lifecycle / pool / step event lands in ONE stream on the ENGINE
-        # clock.  Disabled (the default) it is the no-op recorder — one
-        # attribute lookup per emission site, per-token hot loops guard on
-        # `trace.enabled` and skip even that.
+        # threaded through the scheduler and the family's allocator so
+        # every lifecycle / pool / step event lands in ONE stream on the
+        # ENGINE clock.  Disabled (the default) it is the no-op recorder —
+        # one attribute lookup per emission site, per-token hot loops guard
+        # on `trace.enabled` and skip even that.
         self.trace = trace if trace is not None else NULL_RECORDER
         if self.trace.enabled and self.trace.now_fn is None:
             self.trace.now_fn = self.now_fn
-        mcfg = model.cfg
-        self.kv_cfg = cfg.kv_config()
-        self.cache = PagedKVCache(self.kv_cfg, mcfg.n_layers, mcfg.n_kv_heads,
-                                  mcfg.hd, jnp.dtype(mcfg.dtype))
-        self.cache.alloc.trace = self.trace
-        self.scheduler = ContinuousScheduler(cfg.max_slots, self.kv_cfg,
-                                             self.cache.alloc,
-                                             trace=self.trace)
-        self.metrics = ServeMetrics()
+        # the family seam: raises TypeError for families with neither a
+        # paged nor a slot-pooled serving path
+        self.adapter = resolve_family_adapter(model)(
+            model, mesh, rules, cfg, self.router)
+        self.family = self.adapter.family
+        self.adapter.alloc.trace = self.trace
+        self.scheduler = ContinuousScheduler(
+            cfg.max_slots, trace=self.trace,
+            capacity=self.adapter.capacity())
+        self.scheduler.family = self.family
+        self.metrics = ServeMetrics(family=self.family)
         self._rid = 0
         self._step_idx = 0
         self._done: List[ServeRequest] = []
-        # fixed prefill-lane geometry: the step's prompt-token budget and
-        # the packed-segment descriptor height, both compiled in.  The
-        # height is the EFFECTIVE packing width — cfg.chunk_segments
-        # narrowed by the plan's tuned `max_segments` (old Pallas plans,
-        # tuned before the segmented kernel existed, narrow it to 1) — so
-        # the segmented kernel's grid is exactly as tall as the packing
-        # the scheduler will actually do: the tuned knob sizes the grid,
-        # it doesn't just throttle host-side packing under a wider one.
-        self._chunk_width = cfg.chunk_width
-        self._chunk_segments = max(1, min(
-            cfg.chunk_segments,
-            self.router.chunk_segments(default=cfg.chunk_segments)))
+        # the adapter's resolved prefill-lane geometry (see family.py)
+        self._chunk_width = self.adapter.chunk_width
+        self._chunk_segments = self.adapter.chunk_segments
         # per-slot host state (decode lane; prefilling slots stay zeroed so
         # their dummy decode row writes to the null sink)
         self._lengths = np.zeros((cfg.max_slots,), np.int32)
         self._last_tok = np.zeros((cfg.max_slots,), np.int32)
-        # THE two compiled step programs: the unified step carrying the
-        # decode batch plus one packed prompt chunk, and the decode-only
-        # fast path for steps with no prompt work (the unified program's
-        # chunk lane executes at its compiled width even when idle, so
-        # skipping it is a dispatch decision, not a mask).  Attention
-        # backends and per-stage matmul lane tables come from the plan's
-        # stage choices (decode + the prefill_chunk stage), closed over at
-        # trace time — dispatch never recompiles mid-serve, and admission
-        # compiles nothing at all.
-        decode_backend, _ = self.router.attention_backend("decode")
-        chunk_backend, chunk_config = self.router.attention_backend(
-            "prefill_chunk")
-        self._unified = jit_unified_step(
-            model, mesh, rules,
-            decode_attn_backend=decode_backend,
-            chunk_attn_backend=chunk_backend,
-            chunk_attn_config=chunk_config,
-            decode_matmul_table=self.router.matmul_table("decode"),
-            chunk_matmul_table=self.router.matmul_table("prefill_chunk"),
-            interpret=cfg.interpret)
-        self._decode_only = jit_decode_only_step(
-            model, mesh, rules,
-            decode_attn_backend=decode_backend,
-            decode_matmul_table=self.router.matmul_table("decode"),
-            interpret=cfg.interpret)
-        # resume-only commit (swap-in scatter); single full-width shape
-        self._commit = jit_commit_prefill(model, mesh, rules)
-        # commit the fresh pools to their serving sharding up front: the
-        # unified program's donated pool arguments then carry the SAME
-        # sharding on the very first step as on every later one, so exactly
-        # one executable ever builds (an uncommitted first call would
-        # compile a second, layout-shifted copy of the program)
-        pool_shard = paged_pool_sharding(model, mesh,
-                                         prune_for_mesh(rules, mesh))
-        self.cache.k = jax.device_put(self.cache.k, pool_shard)
-        self.cache.v = jax.device_put(self.cache.v, pool_shard)
+
+    def __getattr__(self, name):
+        # family-owned state (compiled programs, cache, kv config) lives on
+        # the adapter; keep the engine's historical attribute surface
+        if name in type(self)._ADAPTER_ATTRS:
+            return getattr(self.adapter, name)
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
 
     # ------------------------------------------------------------ interface
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
@@ -280,63 +273,60 @@ class ContinuousEngine:
     def reset_metrics(self) -> None:
         """Fresh metrics (e.g. after a warm-up pass); compiled programs and
         cache state are kept."""
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(family=self.family)
 
     # ------------------------------------------------- preemption / resume
     def _ensure_blocks(self, req: ServeRequest) -> None:
-        """Grow req's block table to cover its next decode write (position
+        """Grow req's state to cover its next decode write (position
         `lengths[slot]`), preempting victims while the pool is dry.  The
         submit-time guard (single-request worst case fits the pool) makes
-        the loop terminate: once every other active request is evicted,
-        req owns every allocated block and extend cannot fail."""
+        the loop terminate: once every other eligible request is evicted,
+        req owns every allocated unit and growth cannot fail.  (Families
+        with fixed-size state grow trivially — the adapter returns True.)"""
         need_rows = int(self._lengths[req.slot]) + 1
-        while not self.cache.alloc.extend(req.rid, need_rows):
-            victim = self.scheduler.victim_for_preemption(exclude_rid=req.rid)
+        while not self.adapter.grow_for_decode(req, need_rows):
+            victim = self.scheduler.victim_for_preemption(
+                exclude_rid=req.rid, eligible=self.adapter.victim_eligible)
             if victim is None:
                 raise MemoryError(
                     f"request {req.rid} cannot grow to {need_rows} rows with "
                     "no victims left — submit() guard violated")
             self._preempt(victim)
 
+    def _claim_chunk(self, req: ServeRequest) -> bool:
+        """Cover a prompt chunk's dispatch footprint (the ssm family claims
+        its state row lazily here), preempting capacity holders while the
+        pool is dry.  False only when no eligible victim remains — the
+        chunk then waits for a later step."""
+        while not self.adapter.claim_chunk(req):
+            victim = self.scheduler.victim_for_preemption(
+                exclude_rid=req.rid, eligible=self.adapter.victim_eligible)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
     def _preempt(self, victim: ServeRequest) -> None:
-        """Swap the victim's KV out to host, free its blocks + slot, queue
-        it for resume.  Works mid-prefill too: the committed chunks travel
-        with the swap and `prefilled` marks where the prompt resumes."""
+        """Swap the victim's state out to host, free its capacity + slot,
+        queue it for resume.  Works mid-prefill too: the committed chunks
+        travel with the swap and `prefilled` marks where the prompt
+        resumes."""
         slot = victim.slot
-        nbytes = self.cache.swap_out(victim.rid)
+        nbytes = self.adapter.swap_out(victim.rid)
         self.scheduler.preempt(victim, self.now_fn())
         self._reset_slot(slot)
         self.metrics.record_preemption(nbytes)
 
     def _resume(self, req: ServeRequest) -> None:
-        """Swap a re-admitted request's KV back in: scatter the host buffer
-        into the freshly allocated blocks via the jitted commit program,
-        always padded to the FULL table width (padding ids point at the
-        null sink) so exactly one commit shape ever traces, then restore
-        the slot's host state.  No forward pass — no token is recomputed; a
-        mid-prefill request continues chunking from `prefilled`."""
+        """Swap a re-admitted request's state back in through the family's
+        jitted commit program (one fixed shape — see the adapters'
+        `resume_commit`), then restore the slot's host state.  No forward
+        pass — no token is recomputed; a mid-prefill request continues
+        chunking from `prefilled`."""
         t0 = time.perf_counter()
-        k_host, v_host = self.cache.take_swapped(req.rid)
-        nbytes = k_host.nbytes + v_host.nbytes   # before table padding
-        table = self.cache.alloc.tables[req.rid]
-        nb = k_host.shape[1]
-        assert nb == len(table)
-        bs = self.kv_cfg.block_size
-        nb_pad = self.kv_cfg.max_blocks_per_seq
-        ids = np.full((nb_pad,), NULL_BLOCK, np.int32)
-        ids[:nb] = table
-        if nb_pad > nb:
-            pad = np.zeros(k_host.shape[:1] + (nb_pad - nb,)
-                           + k_host.shape[2:], k_host.dtype)
-            k_host = np.concatenate([k_host, pad], axis=1)
-            v_host = np.concatenate([v_host, pad], axis=1)
-        L = k_host.shape[0]
-        ks = jnp.asarray(k_host.reshape(L, 1, nb_pad * bs, *k_host.shape[3:]))
-        vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
         if self.trace.enabled:
             n_commit = self._commit._cache_size()
-        self.cache.k, self.cache.v = self._commit(
-            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+        nbytes = self.adapter.resume_commit(req)
         swap_in_s = time.perf_counter() - t0
         if self.trace.enabled:
             if self._commit._cache_size() > n_commit:
@@ -359,7 +349,7 @@ class ContinuousEngine:
     def _reset_slot(self, slot: int) -> None:
         # stale lengths on a freed slot would index past the (all-null)
         # block table; zeroed state keeps every inactive slot's writes
-        # pinned to the sink block.
+        # pinned to the sink row.
         self._lengths[slot] = 0
         self._last_tok[slot] = 0
 
@@ -373,44 +363,21 @@ class ContinuousEngine:
         self._done.append(req)
 
     # ----------------------------------------------------------- unified step
-    def _chunk_inputs(self, chunks: List[Tuple[ServeRequest, int, int]]):
-        """Host-side prefill-lane arrays for a packed chunk: the segments'
-        prompt slices concatenated from row 0 (fixed `_chunk_width`,
-        zero-padded), each segment's block table, and the (S, 3) descriptor
-        array [row_offset, seg_len, kv_start].  Idle segment slots carry
-        seg_len 0 with an all-null table (their row_offset sits at the fill
-        level so offsets stay monotone; padding rows divert to the sink)."""
-        c = self._chunk_width
-        ns = self._chunk_segments
-        toks = np.zeros((1, c), np.int32)
-        tables = np.full((ns, self.kv_cfg.max_blocks_per_seq),
-                         NULL_BLOCK, np.int32)
-        info = np.zeros((ns, 3), np.int32)
-        q0 = 0
-        for i, (req, start, n) in enumerate(chunks):
-            toks[0, q0:q0 + n] = req.prompt[start:start + n]
-            held = self.cache.alloc.tables[req.rid]
-            tables[i, :len(held)] = held
-            info[i] = (q0, n, start)
-            q0 += n
-        info[len(chunks):, 0] = q0            # idle slots: empty span at fill
-        return toks, tables, info
-
     def step(self) -> bool:
-        """One engine step = one invocation of one of the TWO compiled step
-        programs: admit (resumes swap back in; fresh arrivals just take a
-        slot), pack the step's prefill chunk (token-budget accounting,
-        greedy fill over up to `chunk_segments` requests), grow every
-        *decoding* request's block table to cover its next token
-        (preempting victims if the pool is dry), then run either the
-        unified program (packed chunk lane + decode lane) or — when no
-        prompt work is pending — the decode-only fast path, which skips
-        the idle chunk-wide forward entirely.  Returns False when nothing
-        ran."""
+        """One engine step = one invocation of one of the family's TWO
+        compiled step programs: admit (resumes swap back in; fresh arrivals
+        just take a slot), pack the step's prefill chunk (token-budget
+        accounting, greedy fill over up to `chunk_segments` requests), grow
+        every *decoding* request's state to cover its next token and claim
+        every packed segment's chunk footprint (preempting victims if the
+        pool is dry), then dispatch either the unified program (packed
+        chunk lane + decode lane) or — when no prompt work is pending —
+        the decode-only fast path, which skips the idle chunk lane
+        entirely.  Returns False when nothing ran."""
         now = self.now_fn()
         admitted = self.scheduler.admit(now)
         for req in admitted:
-            if self.cache.is_swapped(req.rid):
+            if self.adapter.is_swapped(req.rid):
                 self._resume(req)
             # fresh admissions run nothing here: their prompts stream
             # through the unified step's chunk lane, starting this step
@@ -419,7 +386,7 @@ class ContinuousEngine:
                                             self._chunk_segments)
 
         # on-demand growth for the decode batch: every decoding request
-        # secures the block its next write lands in.  A request preempted
+        # secures the unit its next write lands in.  A request preempted
         # as some later grower's victim drops out of this step (slot is
         # None by then) — including, possibly, any of the packed segments'
         # requests.
@@ -427,6 +394,11 @@ class ContinuousEngine:
                     if r is not None and not r.prefilling]:
             if req.slot is not None:
                 self._ensure_blocks(req)
+        # chunk-claim: each packed segment's request must hold its family
+        # footprint before dispatch (ssm: lazy state-row claim; paged:
+        # no-op — the prompt's blocks were allocated at admission)
+        chunks = [ch for ch in chunks
+                  if ch[0].slot is not None and self._claim_chunk(ch[0])]
         chunks = [ch for ch in chunks if ch[0].slot is not None]
 
         decoding = [r for r in self.scheduler.slots
@@ -435,12 +407,9 @@ class ContinuousEngine:
             return bool(admitted)
 
         # decode lane inputs: prefilling slots are masked exactly like empty
-        # ones (null table, zero length) — their dummy row writes to the sink
+        # ones (null index, zero length) — their dummy row writes to the sink
         dec_rids = [r.rid if (r is not None and not r.prefilling) else None
                     for r in self.scheduler.slots]
-        bt = jnp.asarray(self.cache.table_array(dec_rids))
-        lengths = jnp.asarray(self._lengths)
-        tokens = jnp.asarray(self._last_tok[:, None])
 
         trace = self.trace
         kind = "unified" if chunks else "decode_only"
@@ -451,6 +420,7 @@ class ContinuousEngine:
                 trace.emit("chunk_scheduled", t=now, rid=req.rid,
                            start=start, n=n)
             trace.emit("step_begin", t=now, step=step_idx, kind=kind,
+                       family=self.family,
                        lane_width=self._chunk_width if chunks else 0,
                        segments=len(chunks),
                        chunk_tokens=sum(n for _, _, n in chunks),
@@ -459,18 +429,8 @@ class ContinuousEngine:
             n_compiled = prog._cache_size()
 
         t0 = time.perf_counter()
-        if chunks:
-            ch_toks, seg_tables, seg_info = self._chunk_inputs(chunks)
-            nxt_dev, seg_next_dev, self.cache.k, self.cache.v = self._unified(
-                self.params, self.cache.k, self.cache.v, bt, lengths, tokens,
-                jnp.asarray(ch_toks), jnp.asarray(seg_tables),
-                jnp.asarray(seg_info))
-        else:
-            # decode-only fast path: no prompt work pending, so the step
-            # skips the chunk-wide forward instead of masking it
-            nxt_dev, self.cache.k, self.cache.v = self._decode_only(
-                self.params, self.cache.k, self.cache.v, bt, lengths, tokens)
-        nxt = np.asarray(nxt_dev, np.int32)
+        nxt, seg_next = self.adapter.dispatch(
+            self.params, dec_rids, self._lengths, self._last_tok, chunks)
         step_s = time.perf_counter() - t0
         if trace.enabled and prog._cache_size() > n_compiled:
             trace.emit("compile", program=kind, device_s=step_s)
@@ -484,6 +444,7 @@ class ContinuousEngine:
         now = self.now_fn()
         if trace.enabled:
             trace.emit("step_end", t=now, step=step_idx, kind=kind,
+                       family=self.family,
                        lane_width=self._chunk_width if chunks else 0,
                        segments=len(chunks),
                        chunk_tokens=sum(n for _, _, n in chunks),
@@ -491,7 +452,6 @@ class ContinuousEngine:
         if chunks:
             self.metrics.record_chunk_step([n for _, _, n in chunks],
                                            self._chunk_width)
-            seg_next = np.asarray(seg_next_dev, np.int32)
             for i, (req, start, n) in enumerate(chunks):
                 req.prefilled = start + n
                 if trace.enabled:
@@ -516,7 +476,7 @@ class ContinuousEngine:
 
         if decoding:
             self.metrics.record_step(len(decoding), self.cfg.max_slots,
-                                     self.cache.alloc.occupancy())
+                                     self.adapter.occupancy())
             emit_tokens = trace.enabled
             for req in decoding:
                 slot = req.slot

@@ -108,17 +108,86 @@ class ServeRequest:
         return self.first_token_time - self.arrival_time
 
 
-class ContinuousScheduler:
-    """Admission control over `max_slots` decode slots + the block pool."""
+class PagedCapacity:
+    """The paged-KV family's admission/footprint model: the capacity-seam
+    object the scheduler consults instead of hard-wiring block arithmetic.
 
-    def __init__(self, max_slots: int, kv_cfg: KVCacheConfig,
-                 alloc: BlockAllocator, trace=NULL_RECORDER):
-        self.max_slots = max_slots
+    Submit guards, fresh/resume admission gates and the retire-time release
+    are verbatim relocations of the scheduler's pre-seam logic (same order,
+    same reject strings, same trace events), so extracting the seam is a
+    provable no-op for DecoderLM.  `SlotStateCache`'s `SlotCapacity`
+    (serve/statecache.py) is the other implementation — fixed one-row
+    footprint, claimed lazily at first-chunk dispatch."""
+
+    def __init__(self, kv_cfg: KVCacheConfig, alloc: BlockAllocator):
         self.kv_cfg = kv_cfg
         self.alloc = alloc
+
+    def submit_reason(self, req: "ServeRequest") -> Optional[str]:
+        rows = ContinuousScheduler.kv_rows(req)
+        if rows > self.kv_cfg.max_seq:
+            return (f"prompt {req.prompt_len} + max_new "
+                    f"{req.max_new_tokens} exceeds max_seq "
+                    f"{self.kv_cfg.max_seq}")
+        need = self.kv_cfg.blocks_for(rows)
+        usable = self.kv_cfg.num_blocks - 1
+        if need > usable:
+            # could never finish even running alone on an empty pool —
+            # reject now instead of preempting everyone and still dying.
+            # (This guard is also what makes preemption terminate: with
+            # every other request evicted, any admitted request can always
+            # extend to its worst case.)
+            return f"needs {need} KV blocks but the pool only has {usable}"
+        return None
+
+    def can_admit_fresh(self, req: "ServeRequest") -> bool:
+        return self.alloc.can_allocate(self.kv_cfg.blocks_for(req.prompt_len))
+
+    def admit_fresh(self, req: "ServeRequest") -> None:
+        self.alloc.allocate(req.rid, self.kv_cfg.blocks_for(req.prompt_len))
+
+    def can_admit_resume(self, req: "ServeRequest") -> bool:
+        return self.alloc.can_allocate(self.alloc.swapped[req.rid])
+
+    def admit_resume(self, req: "ServeRequest") -> None:
+        self.alloc.swap_in(req.rid)
+
+    def release(self, req: "ServeRequest") -> None:
+        self.alloc.free(req.rid)
+
+    def occupancy(self) -> float:
+        return self.alloc.occupancy()
+
+
+class ContinuousScheduler:
+    """Admission control over `max_slots` decode slots + a capacity model.
+
+    The scheduler owns WHO is resident (slots, queues, admission order,
+    preemption policy); the capacity object owns the family's memory
+    arithmetic (what a request's footprint is, whether the pool covers it,
+    how admission/retire move it).  `PagedCapacity` is the DecoderLM
+    implementation; passing `capacity=` explicitly plugs in another family
+    (`SlotCapacity` for the state-cache families).  The legacy
+    `(max_slots, kv_cfg, alloc)` construction builds a `PagedCapacity`
+    internally and stays bit-identical."""
+
+    def __init__(self, max_slots: int, kv_cfg: Optional[KVCacheConfig] = None,
+                 alloc: Optional[BlockAllocator] = None, trace=NULL_RECORDER,
+                 capacity=None):
+        self.max_slots = max_slots
+        if capacity is None:
+            capacity = PagedCapacity(kv_cfg, alloc)
+        self.capacity = capacity
+        self.kv_cfg = kv_cfg
+        self.alloc = alloc if alloc is not None else getattr(
+            capacity, "alloc", None)
         # structured event recorder (`repro.serve.trace`); the engine passes
         # its own, the default no-op costs one attribute lookup per site
         self.trace = trace
+        # family tag stamped on lifecycle events; the engine overwrites it
+        # from its FamilyAdapter.  Pre-seam traces carried no field, so the
+        # audit treats an absent tag as "decoder".
+        self.family = "decoder"
         self.waiting: Deque[ServeRequest] = deque()
         self.resumed: Deque[ServeRequest] = deque()   # preempted, to re-admit
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
@@ -161,24 +230,13 @@ class ContinuousScheduler:
             self._reject(req, "max_new_tokens must be >= 1")
         if req.prompt_len < 1:
             self._reject(req, "empty prompt")
-        if self.kv_rows(req) > self.kv_cfg.max_seq:
-            self._reject(
-                req, f"prompt {req.prompt_len} + max_new "
-                f"{req.max_new_tokens} exceeds max_seq {self.kv_cfg.max_seq}")
-        need = self.kv_cfg.blocks_for(self.kv_rows(req))
-        usable = self.kv_cfg.num_blocks - 1
-        if need > usable:
-            # could never finish even running alone on an empty pool —
-            # reject now instead of preempting everyone and still dying.
-            # (This guard is also what makes preemption terminate: with
-            # every other request evicted, any admitted request can always
-            # extend to its worst case.)
-            self._reject(req, f"needs {need} KV blocks but the pool only "
-                         f"has {usable}")
+        reason = self.capacity.submit_reason(req)
+        if reason is not None:
+            self._reject(req, reason)
         self.waiting.append(req)
         self.trace.emit("submit", rid=req.rid, arrival=req.arrival_time,
                         prompt_len=req.prompt_len,
-                        max_new=req.max_new_tokens)
+                        max_new=req.max_new_tokens, family=self.family)
 
     def admit(self, now: float) -> List[ServeRequest]:
         """Move waiting/preempted requests into free slots; returns the
@@ -196,10 +254,10 @@ class ContinuousScheduler:
                 continue
             if self.resumed:
                 req = self.resumed[0]
-                if not self.alloc.can_allocate(self.alloc.swapped[req.rid]):
+                if not self.capacity.can_admit_resume(req):
                     break   # nobody jumps a preempted request's re-admission
                 self.resumed.popleft()
-                self.alloc.swap_in(req.rid)
+                self.capacity.admit_resume(req)
                 req.last_stall_s = now - req.preempted_time
                 req.stall_s += req.last_stall_s
                 req.preempted_time = None
@@ -208,11 +266,10 @@ class ContinuousScheduler:
                 req = self.waiting[0]
                 if req.arrival_time > now:
                     break  # not yet arrived (simulated-arrival workloads)
-                need = self.kv_cfg.blocks_for(req.prompt_len)
-                if not self.alloc.can_allocate(need):
+                if not self.capacity.can_admit_fresh(req):
                     break
                 self.waiting.popleft()
-                self.alloc.allocate(req.rid, need)
+                self.capacity.admit_fresh(req)
                 req.admitted_time = now
                 kind = "fresh"
             else:
@@ -220,7 +277,8 @@ class ContinuousScheduler:
             req.slot = slot
             self.slots[slot] = req
             admitted.append(req)
-            self.trace.emit("admit", t=now, rid=req.rid, slot=slot, kind=kind)
+            self.trace.emit("admit", t=now, rid=req.rid, slot=slot, kind=kind,
+                            family=self.family)
         return admitted
 
     def next_chunks(self, budget: int, max_segments: int = 1) -> List[tuple]:
@@ -258,14 +316,23 @@ class ContinuousScheduler:
         return out
 
     def victim_for_preemption(
-            self, exclude_rid: int) -> Optional[ServeRequest]:
+            self, exclude_rid: int,
+            eligible=None) -> Optional[ServeRequest]:
         """Deterministic victim choice when the pool runs dry: the most
         recently admitted active request (LIFO — oldest work is never the
         one rolled back), preferring the largest remaining budget among
         requests admitted at the same instant (the long-tail request has
-        the most KV growth still ahead of it), then the highest rid."""
+        the most KV growth still ahead of it), then the highest rid.
+
+        `eligible` (optional predicate) narrows the candidates to requests
+        whose eviction can actually free capacity — the state-cache family
+        passes `holds-a-state-row`, since an admitted-but-unclaimed request
+        owns nothing to reclaim.  The paged family leaves it unset (every
+        resident holds blocks from admission), which preserves the pre-seam
+        choice exactly."""
         cands = [r for r in self.slots
-                 if r is not None and r.rid != exclude_rid]
+                 if r is not None and r.rid != exclude_rid
+                 and (eligible is None or eligible(r))]
         if not cands:
             return None
         return max(cands, key=lambda r: (r.admitted_time,
@@ -280,7 +347,8 @@ class ContinuousScheduler:
         chunk accounting resumes the prompt mid-stream, recomputing
         nothing."""
         assert req.slot is not None and self.slots[req.slot] is req
-        self.trace.emit("preempt", t=now, rid=req.rid, slot=req.slot)
+        self.trace.emit("preempt", t=now, rid=req.rid, slot=req.slot,
+                        family=self.family)
         self.slots[req.slot] = None
         req.slot = None
         req.preemptions += 1
@@ -288,11 +356,12 @@ class ContinuousScheduler:
         self.resumed.append(req)
 
     def retire(self, req: ServeRequest, now: float) -> None:
-        """Release the request's slot and KV blocks."""
+        """Release the request's slot and its capacity holding (KV blocks /
+        state row)."""
         req.finish_time = now
-        self.alloc.free(req.rid)
+        self.capacity.release(req)
         assert req.slot is not None and self.slots[req.slot] is req
         self.slots[req.slot] = None
         req.slot = None
         self.trace.emit("finish", t=now, rid=req.rid,
-                        n_output=len(req.output))
+                        n_output=len(req.output), family=self.family)

@@ -156,6 +156,7 @@ def metrics_snapshot(metrics) -> Dict[str, Any]:
     trace: the scalar summary plus the raw per-request sample lists the
     audit recomputes from events (TTFT, latency)."""
     snap = dict(metrics.summary())
+    snap["family"] = getattr(metrics, "family", "decoder")
     snap["ttfts_s"] = list(metrics.ttfts_s)
     snap["latencies_s"] = list(metrics.latencies_s)
     return snap

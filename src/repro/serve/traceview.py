@@ -24,6 +24,11 @@ recomputable from the event stream alone.  Checks:
   * **dispatch** — `step_end` events with kind `decode_only` carried zero
     segments and zero chunk tokens, and their count matches
     `decode_only_steps` (same for `chunk_steps` / unified);
+  * **family** — lifecycle and step events carry ONE consistent serving
+    family tag ("decoder" | "ssm"; events from traces recorded before the
+    family seam carry none and default to "decoder"), matching the
+    snapshot's recorded family — the same audit holds for both engine
+    families;
   * **export** — the Chrome-trace-event export is valid (JSON-serializable,
     required keys per event).
 
@@ -337,6 +342,21 @@ def audit(events: List[TraceEvent], metrics=None,
     _audit_pool(events, metadata, violations, checks)
     kinds = _audit_steps(events, violations, checks)
     checks["requests"] = len(lcs)
+
+    # family consistency: one engine serves one family; absent tags are
+    # pre-seam traces, i.e. the decoder family
+    fams = {e.fields.get("family", "decoder") for e in events
+            if e.name in ("submit", "admit", "preempt", "finish",
+                          "step_begin", "step_end")}
+    if len(fams) > 1:
+        violations.append(
+            f"mixed serving families in one trace: {sorted(fams)}")
+    checks["family"] = sorted(fams)[0] if fams else "decoder"
+    if metrics is not None and isinstance(metrics, dict):
+        mfam = metrics.get("family", "decoder")
+        if fams and mfam not in fams:
+            violations.append(f"metrics family {mfam!r} not among event "
+                              f"families {sorted(fams)}")
 
     finished = [x for x in lcs.values() if x.finish_t is not None]
     if metrics is not None:

@@ -1,0 +1,142 @@
+"""Mamba2 in the continuous scheduler: differential pins vs the drain.
+
+The `SSMFamilyAdapter` serves `zoo.MambaLM` through the SAME
+family-agnostic `ContinuousEngine` the decoder uses — fixed-size
+slot-pooled conv+SSM state rows (repro.serve.statecache) instead of paged
+KV blocks.  The contract mirrors the decoder's: byte-identical greedy
+streams to the `FixedBatchEngine` drain (batch_size=1 — the per-request
+ground truth), exactly two step executables plus the one-shape swap-in
+commit, and preemption that swaps STATE ROWS without perturbing a single
+token.  Prompt lengths are <= ssm_chunk or multiples of it because the
+fixed-batch reference prefills whole prompts through the SSD scan, which
+requires chunk alignment; the continuous chunk lane itself pads ragged
+tails with zeroed-dt rows and takes any length.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    FixedBatchEngine,
+    RuntimeConfig,
+    SSMFamilyAdapter,
+    ServeConfig,
+    TraceRecorder,
+    write_trace,
+)
+from repro.serve import traceview
+
+MAX_NEW = 8
+LENS = (5, 16, 32, 7, 16, 48)     # partial, exact, and multi-chunk prompts
+
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    cfg = get_config("mamba2-2.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = single_device_mesh()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l in LENS]
+    fixed = FixedBatchEngine(model, params, mesh, DEFAULT_RULES,
+                             ServeConfig(batch_size=1, max_seq=64,
+                                         max_new_tokens=MAX_NEW))
+    for p in prompts:
+        fixed.submit(p)
+    ref = {r.rid: r.output for r in fixed.run()}
+    return cfg, model, params, mesh, prompts, ref
+
+
+def _virtual_clock():
+    c = iter(range(1 << 20))
+    return lambda: float(next(c))
+
+
+def _drain(engine, prompts):
+    for p in prompts:
+        engine.submit(p, arrival_time=0.0)
+    return {r.rid: r.output for r in engine.run()}
+
+
+def test_ssm_continuous_matches_fixed_drain(mamba_setup):
+    """Chunked-prefill commit into state slots + slot-batched decode must
+    reproduce the drain's greedy streams exactly, from one unified and one
+    decode-only executable."""
+    cfg, model, params, mesh, prompts, ref = mamba_setup
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                           RuntimeConfig(max_slots=3, chunk_tokens=16,
+                                         max_new_tokens=MAX_NEW),
+                           now_fn=_virtual_clock())
+    assert eng.family == "ssm"
+    assert isinstance(eng.adapter, SSMFamilyAdapter)
+    assert eng._chunk_width % cfg.ssm_chunk == 0   # SSD scan alignment
+    done = _drain(eng, prompts)
+    assert done == ref                             # byte-identical streams
+    assert eng._unified._cache_size() == 1
+    assert eng._decode_only._cache_size() == 1
+    assert eng.metrics.preemptions == 0            # pool sized for the slots
+    eng.cache.alloc.check_invariants()
+    assert eng.cache.alloc.num_used == 0           # every row returned
+
+
+def test_ssm_forced_slot_preemption_stays_byte_identical(mamba_setup):
+    """State pool one row SHORT of the slot count (state_slots == max_slots
+    -> usable == max_slots - 1): the replay must cross state-row swap-out /
+    swap-in and still match the drain token-for-token, with the swap-in
+    scatter compiling exactly once and the family taxonomy + trace audit
+    holding over the run."""
+    cfg, model, params, mesh, prompts, ref = mamba_setup
+    rec = TraceRecorder()
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                           RuntimeConfig(max_slots=3, chunk_tokens=16,
+                                         max_new_tokens=MAX_NEW,
+                                         state_slots=3),
+                           now_fn=_virtual_clock(), trace=rec)
+    done = _drain(eng, prompts)
+    assert done == ref
+    assert eng.metrics.preemptions >= 1            # pressure actually bit
+    assert eng._unified._cache_size() == 1
+    assert eng._decode_only._cache_size() == 1
+    assert eng._commit._cache_size() == 1          # swap-in scatter: one shape
+
+    swap_outs = [e for e in rec.events if e.name == "swap_out"]
+    assert swap_outs and all(e.fields["nbytes"] > 0 for e in swap_outs)
+    lifecycle = [e for e in rec.events
+                 if e.name in ("submit", "admit", "preempt", "finish",
+                               "step_begin", "step_end")]
+    assert lifecycle
+    assert all(e.fields.get("family") == "ssm" for e in lifecycle)
+    assert eng.metrics.family == "ssm"
+    report = traceview.audit(
+        rec.events, metrics=eng.metrics,
+        metadata={"usable_blocks": eng.cache.cfg.usable, "family": "ssm"})
+    assert report.ok, report.summary()
+    eng.cache.alloc.check_invariants()
+    assert eng.cache.alloc.num_used == 0 and not eng.cache.alloc.swapped
+
+
+def test_ssm_traceview_cli_audits_traced_run(mamba_setup, tmp_path):
+    """The PR 6 audit pipeline holds for the ssm family end-to-end: a traced
+    continuous run written with write_trace passes the standalone
+    `python -m repro.serve.traceview` CLI (exit 0)."""
+    cfg, model, params, mesh, prompts, ref = mamba_setup
+    rec = TraceRecorder()
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                           RuntimeConfig(max_slots=3, chunk_tokens=16,
+                                         max_new_tokens=MAX_NEW,
+                                         state_slots=3),
+                           now_fn=_virtual_clock(), trace=rec)
+    done = _drain(eng, prompts)
+    assert done == ref
+    path = tmp_path / "ssm_trace.json"
+    write_trace(str(path), rec.events, metrics=eng.metrics,
+                metadata={"usable_blocks": eng.cache.cfg.usable,
+                          "block_size": 1, "family": "ssm"})
+    assert traceview.main([str(path)]) == 0

@@ -1,0 +1,146 @@
+"""Property-based `SlotAllocator` invariants (hypothesis): the slot-pooled
+state cache (repro.serve.statecache) is the fixed-size rendering of the
+paged `BlockAllocator`, and it keeps the same discipline under adversarial
+search — under arbitrary interleavings of allocate / free / swap_out /
+swap_in the allocator must keep `free + used == usable`, never hand a row
+to two owners, never leak the null row, fail loudly on double-free and on
+re-allocating a swapped-out request, and stay resumable when a swap-in
+finds the pool dry.  `check_invariants()` runs after EVERY operation.
+
+Mirror of `test_kv_alloc_properties.py` (the paged pool's suite); the same
+CI profile applies (HYPOTHESIS_PROFILE=ci, registered in conftest.py).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.statecache import (
+    NULL_SLOT,
+    SlotAllocator,
+    SlotStateCache,
+    StateCacheConfig,
+)
+
+
+def run_op_sequence(cfg: StateCacheConfig, ops) -> SlotAllocator:
+    """Interpret (kind, x) pairs against a fresh allocator, asserting the
+    full invariant set after every operation.  `x` is folded into whatever
+    range the chosen operation needs, so any integer sequence is a valid
+    program — hypothesis shrinks freely."""
+    alloc = SlotAllocator(cfg)
+    live, swapped = [], []
+    next_rid = 1
+
+    def check():
+        alloc.check_invariants()
+        assert alloc.num_free + alloc.num_used == cfg.usable
+        assert sorted(alloc.owners) == sorted(live)
+        assert sorted(alloc.swapped) == sorted(swapped)
+        assert 0.0 <= alloc.occupancy() <= 1.0
+
+    for kind, x in ops:
+        kind = kind % 4
+        if kind == 0:                                   # allocate
+            rid = next_rid
+            next_rid += 1
+            if alloc.num_free == 0:                     # pool exhausted
+                with pytest.raises(MemoryError):
+                    alloc.allocate(rid)
+            else:
+                row = alloc.allocate(rid)
+                assert row != NULL_SLOT
+                assert alloc.slot_of(rid) == row and alloc.holds(rid)
+                with pytest.raises(ValueError):
+                    alloc.allocate(rid)                 # one row per request
+                live.append(rid)
+        elif kind == 1 and live:                        # free (+ double-free)
+            rid = live.pop(x % len(live))
+            assert alloc.free(rid) == 1
+            with pytest.raises(KeyError):
+                alloc.free(rid)                         # idempotent-by-error
+        elif kind == 2 and live:                        # swap_out
+            rid = live.pop(x % len(live))
+            free_before = alloc.num_free
+            assert alloc.swap_out(rid) == 1
+            assert alloc.num_free == free_before + 1
+            assert alloc.swapped[rid] == 1
+            with pytest.raises(ValueError):
+                alloc.allocate(rid)       # swapped rid resumes, never reallocs
+            swapped.append(rid)
+        elif kind == 3 and swapped:                     # swap_in
+            rid = swapped[x % len(swapped)]
+            if alloc.num_free == 0:
+                with pytest.raises(MemoryError):
+                    alloc.swap_in(rid)
+                assert alloc.swapped[rid] == 1          # still resumable
+            else:
+                row = alloc.swap_in(rid)
+                assert row != NULL_SLOT
+                swapped.remove(rid)
+                live.append(rid)
+        check()
+
+    return alloc
+
+
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 1 << 16)), max_size=150)
+
+
+@given(num_slots=st.integers(2, 24), ops=ops_strategy)
+@settings(deadline=None)
+def test_slot_allocator_invariants_under_random_ops(num_slots, ops):
+    run_op_sequence(StateCacheConfig(num_slots=num_slots), ops)
+
+
+@given(ops=ops_strategy)
+@settings(deadline=None)
+def test_slot_allocator_drains_back_to_full_pool(ops):
+    """After any program, releasing every survivor restores the exact free
+    pool — no row is ever lost or duplicated across swap round-trips."""
+    cfg = StateCacheConfig(num_slots=9)
+    alloc = run_op_sequence(cfg, ops)
+    for rid in list(alloc.owners):
+        alloc.free(rid)
+    for rid in list(alloc.swapped):
+        del alloc.swapped[rid]
+    alloc.check_invariants()
+    assert alloc.num_free == cfg.usable
+    assert alloc.num_used == 0
+
+
+# ------------------------------------------------- device-pool round trips
+def test_state_cache_swap_round_trip_preserves_bytes():
+    """swap_out copies the owner's rows to host buffers byte-for-byte and
+    reports the bytes moved; take_swapped hands back those exact arrays."""
+    cache = SlotStateCache(StateCacheConfig(num_slots=3), n_layers=2,
+                           conv_width=4, conv_dim=3, nheads=2, head_dim=2,
+                           d_state=5)
+    row = cache.alloc.allocate(7)
+    conv_val = np.arange(2 * 3 * 3, dtype=np.float32).reshape(2, 3, 3)
+    ssm_val = np.arange(2 * 2 * 2 * 5, dtype=np.float32).reshape(2, 2, 2, 5)
+    cache.conv = cache.conv.at[:, row].set(conv_val)
+    cache.ssm = cache.ssm.at[:, row].set(ssm_val)
+
+    nbytes = cache.swap_out(7)
+    assert nbytes == conv_val.nbytes + ssm_val.nbytes
+    assert cache.is_swapped(7) and not cache.alloc.holds(7)
+    conv_host, ssm_host = cache.take_swapped(7)
+    np.testing.assert_array_equal(conv_host, conv_val)
+    np.testing.assert_array_equal(ssm_host, ssm_val)
+    assert not cache.is_swapped(7)
+
+
+def test_index_array_points_absent_requests_at_null_row():
+    cache = SlotStateCache(StateCacheConfig(num_slots=4), n_layers=1,
+                           conv_width=4, conv_dim=2, nheads=1, head_dim=2,
+                           d_state=2)
+    r1 = cache.alloc.allocate(1)
+    r2 = cache.alloc.allocate(2)
+    idx = cache.index_array([2, None, 1, 99])
+    assert idx.dtype == np.int32
+    assert list(idx) == [r2, NULL_SLOT, r1, NULL_SLOT]

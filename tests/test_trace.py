@@ -154,9 +154,13 @@ def test_bench_serving_csv_schema_pinned():
         "serve_lane_xla-only_tok_s",
         "serve_lane_tuned_plan_tok_s",
         "serve_lane_forced_pallas_tok_s",
+        "serve_ssm_fixed_tok_s",
+        "serve_ssm_continuous_tok_s",
+        "serve_ssm_speedup_x",
+        "serve_ssm_preemptions",
     ]
     # sections the smoke run skips drop their rows, never reorder the rest
-    assert bs.expected_csv_names(pressure=False, lanes=False) == \
+    assert bs.expected_csv_names(pressure=False, lanes=False, ssm=False) == \
         bs.expected_csv_names()[:8]
     row = bs.csv_row("serve_fixed_tok_s", np.float64(12.5), "derived note")
     assert row == ("serve_fixed_tok_s", 12.5, "derived note")
