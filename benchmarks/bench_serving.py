@@ -72,6 +72,17 @@ replay exercises slot preemption + host swap, vs the arrival-aware
 tokens/s both engines, TTFT p95, preemption count, and a zero-errors
 guard (every submitted request must complete).
 
+`--sampling mixed` gives every headline request per-request
+SamplingParams from a fixed cycle (greedy / temperature / temperature+
+top-k / temperature+top-p, unique seed each) instead of all-greedy — the
+knobs and keys are traced data, so the run still uses the same two
+compiled step programs.  A SAMPLED-DIFFERENTIAL section (skip with
+`--no-sampled`) always replays a mixed-sampling prefix of the workload
+through a fresh continuous engine AND the B=1 fixed drain with aligned
+rids: because every token's draw is keyed by (seed, rid, token_index),
+the two engines must produce byte-identical sampled streams; any
+mismatch is a non-zero exit.
+
 `--trace out.json` additionally records the headline continuous run's
 structured event trace (repro.serve.trace): the file is Chrome-trace JSON
 (drop it on ui.perfetto.dev for one timeline track per request plus
@@ -106,6 +117,7 @@ from repro.serve import (
     FixedBatchEngine,
     PlanRouter,
     RuntimeConfig,
+    SamplingParams,
     ServeConfig,
     TraceRecorder,
     build_serve_plan,
@@ -113,6 +125,20 @@ from repro.serve import (
     write_trace,
 )
 from repro.serve import traceview
+
+
+def mixed_sampling(i: int) -> SamplingParams:
+    """Per-request sampling cycle for `--sampling mixed` and the sampled
+    differential: greedy / pure temperature / temperature+top-k /
+    temperature+top-p, each sampled request with its own seed."""
+    r = i % 4
+    if r == 0:
+        return SamplingParams()
+    if r == 1:
+        return SamplingParams(temperature=0.8, seed=1000 + i)
+    if r == 2:
+        return SamplingParams(temperature=1.0, top_k=8, seed=1000 + i)
+    return SamplingParams(temperature=0.9, top_p=0.85, seed=1000 + i)
 
 
 def make_workload(rng: np.random.Generator, n: int, vocab: int, rate_hz: float,
@@ -138,7 +164,8 @@ def drive_continuous(engine: ContinuousEngine, workload) -> dict:
     engine.metrics.start_time = t0
     for w in workload:
         engine.submit(w["prompt"], max_new_tokens=w["max_new"],
-                      arrival_time=t0 + w["arrival"])
+                      arrival_time=t0 + w["arrival"],
+                      sampling=w.get("sampling"))
     done = engine.run()
     s = engine.metrics.summary()
     return {
@@ -190,7 +217,7 @@ def drive_fixed(model, params, mesh, cfg: ServeConfig, prompt_pad: int,
             time.sleep(min(1e-3, pending[0]["arrival"] - now))
             continue
         for w in batch:
-            eng.submit(pad(w["prompt"]))
+            eng.submit(pad(w["prompt"]), sampling=w.get("sampling"))
         eng.run()
         t_done = time.perf_counter()
         t_last = t_done
@@ -447,6 +474,65 @@ def interference_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
     return results
 
 
+# ------------------------------------------------- sampled differential
+def sampled_differential(model, params, mesh, cfg, rcfg: RuntimeConfig,
+                         workload, n: int = 12,
+                         verbose: bool = True) -> dict:
+    """Mixed-sampling replay pinned against the B=1 fixed drain.
+
+    A prefix of the Poisson workload gets per-request SamplingParams from
+    the mixed cycle and runs through a FRESH continuous engine (chunked
+    prefill, packing, the usual schedule) and through a fresh
+    `FixedBatchEngine` at batch_size=1 with UNPADDED prompts (left-padding
+    changes the logits; B=1 needs none).  Every token's draw is keyed by
+    (seed, rid, token_index) — pure request identity and progress — so the
+    rid sequences are aligned (fresh engines, same submission order) and
+    the continuous streams must equal the drain's byte for byte (prefix
+    compare: the static drain decodes the batch-wide worst-case budget).
+    Any mismatch fails the bench."""
+    sub = [dict(w) for w in workload[:n]]
+    for i, w in enumerate(sub):
+        w["sampling"] = mixed_sampling(i)
+    prompt_hi = max(len(w["prompt"]) for w in sub)
+
+    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg)
+    warm_engine(engine, cfg.vocab, prompt_hi)
+    engine._rid = 0       # keys are rid-keyed: drop the warm-up rid so the
+    #                       replay's rids align with the fresh baseline's
+    t0 = time.perf_counter()
+    engine.metrics.start_time = t0
+    for w in sub:
+        engine.submit(w["prompt"], max_new_tokens=w["max_new"],
+                      arrival_time=t0 + w["arrival"], sampling=w["sampling"])
+    finished = engine.run()
+    done = {q.rid: q.output for q in finished}
+    s = engine.metrics.summary()
+    r = {"tokens_per_s": s["tokens_per_s"], "done": len(finished)}
+
+    fixed = FixedBatchEngine(
+        model, params, mesh, DEFAULT_RULES,
+        ServeConfig(batch_size=1, max_seq=rcfg.max_seq,
+                    max_new_tokens=max(w["max_new"] for w in sub)))
+    for w in sub:
+        fixed.submit(w["prompt"], sampling=w["sampling"])
+    ref = {q.rid: q.output for q in fixed.run()}
+
+    mismatches = sum(1 for rid, out in done.items()
+                     if out != ref[rid][: len(out)])
+    sampled_n = sum(1 for w in sub if not w["sampling"].greedy)
+    out = {"tokens_per_s": r["tokens_per_s"], "mismatches": mismatches,
+           "requests": len(sub), "sampled_requests": sampled_n,
+           "done": r["done"]}
+    if verbose:
+        ok = mismatches == 0 and r["done"] == len(sub)
+        print(f"sampled    : {r['tokens_per_s']:8.1f} tok/s | "
+              f"{sampled_n}/{len(sub)} sampled | "
+              f"mismatches vs B=1 drain: {mismatches} "
+              f"({'PASS' if ok else 'FAIL'}: keyed streams replay "
+              "byte-identically across schedules)")
+    return out
+
+
 # --------------------------------------------------- segment-packing sweep
 def packing_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
                   requests: int = 24, seed: int = 0, chunk_tokens: int = 32,
@@ -492,7 +578,8 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           lanes: bool = True, lane_requests: int = 12,
           pressure: bool = True, interference: bool = True,
           interference_requests: int = 24, packing: bool = True,
-          packing_requests: int = 24,
+          packing_requests: int = 24, sampling: str = "greedy",
+          sampled: bool = True, sampled_requests: int = 12,
           trace_path: str = None) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
@@ -538,6 +625,11 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
 
     workload = make_workload(rng, requests, cfg.vocab, rate_hz,
                              prompt_hi=prompt_hi, new_hi=new_hi)
+    if sampling == "mixed":
+        # per-request knobs on the HEADLINE workload too: same two step
+        # programs, the knob/key arrays are just traced data
+        for i, w in enumerate(workload):
+            w["sampling"] = mixed_sampling(i)
 
     if recorder is not None:
         recorder.clear()      # drop warm-up/capacity events: the trace (and
@@ -585,6 +677,13 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
             print("per-request time attribution (from trace events):")
             print(traceview.format_attribution(report.lifecycles))
             print(report.summary())
+    if sampled:
+        if verbose:
+            print("--- sampled differential (mixed-sampling prefix vs the "
+                  "B=1 fixed drain; keyed streams must match bytewise) ---")
+        out["sampled"] = sampled_differential(
+            model, params, mesh, cfg, rcfg,
+            workload, n=min(sampled_requests, requests), verbose=verbose)
     if packing:
         if verbose:
             print("--- segment-packing sweep (short-prompt-heavy Poisson "
@@ -617,7 +716,7 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
 # ------------------------------------------------------ ssm family scenario
 def bench_ssm(requests: int = 16, slots: int = 3, seed: int = 0,
               rate_hz: float = 0.0, verbose: bool = True,
-              trace_path: str = None) -> dict:
+              sampling: str = "greedy", trace_path: str = None) -> dict:
     """Mamba2 through the SAME continuous scheduler (`--family ssm`).
 
     The `SSMFamilyAdapter` swaps the paged KV pool for the fixed-size
@@ -667,6 +766,9 @@ def bench_ssm(requests: int = 16, slots: int = 3, seed: int = 0,
     workload = make_workload(rng, requests, cfg.vocab, rate_hz,
                              prompt_lo=4, prompt_hi=prompt_pad,
                              new_lo=2, new_hi=new_hi)
+    if sampling == "mixed":
+        for i, w in enumerate(workload):
+            w["sampling"] = mixed_sampling(i)
     if recorder is not None:
         recorder.clear()      # the trace covers exactly the headline replay
     cont = drive_continuous(engine, workload)
@@ -744,12 +846,15 @@ def csv_row(name: str, value, derived: str = "") -> tuple:
     return (name, float(value), str(derived))
 
 
-def expected_csv_names(packing: bool = True, interference: bool = True,
+def expected_csv_names(sampled: bool = True, packing: bool = True,
+                       interference: bool = True,
                        pressure: bool = True, lanes: bool = True,
                        ssm: bool = True) -> list:
     """The exact, ordered row names run() appends — the pinned schema."""
     names = ["serve_fixed_tok_s", "serve_continuous_tok_s",
              "serve_speedup_x", "serve_chunk_fill_frac"]
+    if sampled:
+        names += ["serve_sampled_tok_s", "serve_sampled_mismatches"]
     if packing:
         names += [f"serve_packing_{l.replace('-', '_')}_tok_s"
                   for l in PACKING_LABELS]
@@ -784,6 +889,12 @@ def run(csv_rows):
                             f"{r['continuous']['packed_segments']} "
                             f"decode_only_steps="
                             f"{r['continuous']['decode_only_steps']}"))
+    sd = r.get("sampled", {})
+    csv_rows.append(csv_row("serve_sampled_tok_s", sd["tokens_per_s"],
+                            f"sampled={sd['sampled_requests']}/"
+                            f"{sd['requests']} mixed cycle"))
+    csv_rows.append(csv_row("serve_sampled_mismatches", sd["mismatches"],
+                            "keyed streams vs B=1 drain (must be 0)"))
     for label, pr in r.get("packing", {}).items():
         csv_rows.append(csv_row(
             f"serve_packing_{label.replace('-', '_')}_tok_s",
@@ -854,6 +965,20 @@ if __name__ == "__main__":
                     help="skip the segment-packing sweep")
     ap.add_argument("--packing-requests", type=int, default=24,
                     help="requests in the short-prompt packing mix")
+    ap.add_argument("--sampling", choices=("greedy", "mixed"),
+                    default="greedy",
+                    help="per-request sampling on the headline workload: "
+                         "greedy (default, temperature 0 everywhere) or "
+                         "mixed (a fixed cycle of greedy / temperature / "
+                         "top-k / top-p with per-request seeds; same two "
+                         "compiled step programs — knobs are traced data)")
+    ap.add_argument("--no-sampled", action="store_true",
+                    help="skip the sampled differential (mixed-sampling "
+                         "replay pinned byte-identical against the B=1 "
+                         "fixed drain; mismatches exit non-zero)")
+    ap.add_argument("--sampled-requests", type=int, default=12,
+                    help="workload prefix replayed in the sampled "
+                         "differential")
     ap.add_argument("--require-decode-only", action="store_true",
                     help="exit non-zero unless the headline continuous run "
                          "dispatched the decode-only fast path (CI guard)")
@@ -864,7 +989,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.family == "ssm":
         result = bench_ssm(args.requests, args.slots, args.seed, args.rate,
-                           trace_path=args.trace)
+                           sampling=args.sampling, trace_path=args.trace)
         if args.trace and not result.get("trace_audit_ok", False):
             print("trace audit: FAIL — event trace disagrees with "
                   "ServeMetrics")
@@ -881,9 +1006,16 @@ if __name__ == "__main__":
                    interference_requests=args.interference_requests,
                    packing=not args.no_packing,
                    packing_requests=args.packing_requests,
+                   sampling=args.sampling, sampled=not args.no_sampled,
+                   sampled_requests=args.sampled_requests,
                    trace_path=args.trace)
     if args.trace and not result.get("trace_audit_ok", False):
         print("trace audit: FAIL — event trace disagrees with ServeMetrics")
+        raise SystemExit(1)
+    sd = result.get("sampled")
+    if sd is not None and (sd["mismatches"] or sd["done"] < sd["requests"]):
+        print(f"sampled differential: FAIL — {sd['mismatches']} stream "
+              f"mismatches, {sd['done']}/{sd['requests']} completed")
         raise SystemExit(1)
     if args.require_decode_only:
         n = result["continuous"]["decode_only_steps"]

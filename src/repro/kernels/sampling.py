@@ -1,0 +1,99 @@
+"""Fused per-row keyed sampling: the step programs' token-selection tail.
+
+Woodpecker-DL's inference thesis — exploit structure known before the run
+to fuse and pre-select per-operator implementations — applies to token
+selection too: temperature / top-k / top-p are per-REQUEST knobs, but the
+serving step programs compile once per family, so the knobs must enter as
+*traced data*, never as trace-time constants.  This module is the pure
+device-side routine the four serving step programs
+(`repro.launch.steps.jit_unified_step` / `jit_decode_only_step` and the
+ssm pair) fuse behind their logits, and the host-facing policy layer
+(`repro.serve.sampling`) packs the matching arrays.
+
+Conventions (shared with `repro.serve.sampling`):
+
+  * `sampling` — float32 (rows, 3): [temperature, top_k, top_p] per row.
+    temperature <= 0 selects greedy argmax BITWISE (the sampled lane's
+    result is discarded by a `where`, so a temperature-0 row reproduces
+    the pre-sampling argmax path exactly); top_k < 1 disables the top-k
+    mask; top_p >= 1 disables the nucleus mask.
+  * `keys` — int32 (rows, 3): [seed, rid, token_index].  The PRNG key is
+    derived INSIDE the program as fold_in(fold_in(PRNGKey(seed), rid),
+    token_index), a pure per-row function of the triple — a token's draw
+    depends on nothing but its own (seed, rid, token_index), so sampled
+    streams replay bitwise across batch packings, chunk schedules,
+    preemption/resume, and across engines (the continuous runtime and the
+    fixed-batch differential baseline share this exact routine).
+
+Every row is computed by the same vmapped element-wise/sort/cumsum float
+program regardless of batch height, which is the same per-row-identity
+property the serving tests already pin for the argmax path.
+
+Tie semantics (documented, deterministic): top-k keeps every logit EQUAL
+to the k-th largest (a tie at the threshold keeps more than k entries);
+top-p keeps every probability equal to the smallest nucleus member's.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# temperature floor for the sampled lane; temperature <= 0 rows never use
+# the scaled logits (the `where` picks argmax), the floor only keeps the
+# discarded lane finite
+_TEMP_EPS = 1e-6
+
+
+def derive_key(seed, rid, token_index):
+    """Per-token PRNG key from the (seed, rid, token_index) triple; all
+    three may be traced scalars."""
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, rid)
+    return jax.random.fold_in(key, token_index)
+
+
+def mask_top_k(x, k):
+    """Keep the k largest entries of `x` (last axis), mask the rest to
+    -inf.  `k` is a traced int scalar; k < 1 or k >= size disables the
+    mask.  Ties at the k-th value are all kept."""
+    v = x.shape[-1]
+    kk = jnp.where((k < 1) | (k >= v), v, k).astype(jnp.int32)
+    thr = jnp.sort(x, axis=-1)[v - kk]
+    return jnp.where(x < thr, -jnp.inf, x)
+
+
+def mask_top_p(x, p):
+    """Nucleus mask over logits `x` (one row): keep the MINIMAL set of
+    highest-probability tokens whose total probability reaches `p`, mask
+    the rest to -inf.  `p` is a traced float scalar; p >= 1 disables the
+    mask.  Ties at the smallest kept probability are all kept."""
+    probs = jax.nn.softmax(x, axis=-1)
+    sp = jnp.sort(probs, axis=-1)[::-1]
+    csum_before = jnp.cumsum(sp) - sp           # mass strictly above each
+    keep = csum_before < p                      # minimal covering prefix
+    thr = jnp.min(jnp.where(keep, sp, jnp.inf))
+    masked = jnp.where(probs < thr, -jnp.inf, x)
+    return jnp.where(p >= 1.0, x, masked)
+
+
+def _sample_row(logits_row, sampling_row, key_row):
+    """One row's token: argmax when temperature <= 0 (bitwise the greedy
+    path), else a categorical draw from the temperature-scaled, top-k /
+    top-p masked distribution under the row's derived key."""
+    greedy = jnp.argmax(logits_row, axis=-1).astype(jnp.int32)
+    temp = sampling_row[0]
+    x = logits_row.astype(jnp.float32) / jnp.maximum(temp, _TEMP_EPS)
+    x = mask_top_k(x, sampling_row[1].astype(jnp.int32))
+    x = mask_top_p(x, sampling_row[2])
+    key = derive_key(key_row[0], key_row[1], key_row[2])
+    sampled = jax.random.categorical(key, x).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)
+
+
+def sample_tokens(logits, sampling, keys):
+    """(rows, V) logits + (rows, 3) sampling + (rows, 3) keys ->
+    (rows,) int32 next tokens.  Pure function of its arguments — safe to
+    fuse inside any jitted step program; every argument is traced data so
+    per-request knobs never retrace."""
+    return jax.vmap(_sample_row)(logits, sampling, keys)

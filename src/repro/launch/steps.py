@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.kernels.dispatch import matmul_dispatch
+from repro.kernels.sampling import sample_tokens
 from repro.distributed.sharding import (
     DEFAULT_RULES,
     ShardingRules,
@@ -299,7 +300,9 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
                      interpret: bool = True):
     """(params, k_pool, v_pool,
         dec_tables, dec_lengths, dec_tokens,   # decode lane: every slot
-        ch_tokens, seg_tables, seg_info)       # prefill lane: packed chunk
+        ch_tokens, seg_tables, seg_info,       # prefill lane: packed chunk
+        dec_sampling, dec_keys,                # per-slot sampling (traced)
+        seg_sampling, seg_keys)                # per-segment sampling (traced)
         -> (dec_next (slots,), seg_next (S,), k_pool, v_pool)
 
     THE serving step program for steps that carry prompt work: each
@@ -324,11 +327,17 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
     exactly why chunk-less steps dispatch `jit_decode_only_step` instead
     (the second and last step executable; see ContinuousEngine.step).
 
-    seg_next holds each segment's next-token argmax, valid only for
+    seg_next holds each segment's next-token sample, valid only for
     segments that complete their prompt this step (the host consumes
-    exactly those).  The attention backends and the per-stage matmul
-    tables (the plan's `decode` and `prefill_chunk` stage choices) are
-    closed over — static at trace time, zero per-step dispatch cost."""
+    exactly those).  Sampling is FUSED per lane via
+    `repro.kernels.sampling.sample_tokens`: the (rows, 3) float32
+    [temperature, top_k, top_p] and (rows, 3) int32 [seed, rid,
+    token_index] arrays are traced data, so per-request knobs never
+    retrace — greedy rows (temperature 0) reduce bitwise to the argmax
+    path this program always had.  The attention backends and the
+    per-stage matmul tables (the plan's `decode` and `prefill_chunk`
+    stage choices) are closed over — static at trace time, zero per-step
+    dispatch cost."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     pool_shard = paged_pool_sharding(model, mesh, rules)
@@ -336,7 +345,8 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
     def unified_step(params, k_pool, v_pool, dec_tables, dec_lengths,
-                     dec_tokens, ch_tokens, seg_tables, seg_info):
+                     dec_tokens, ch_tokens, seg_tables, seg_info,
+                     dec_sampling, dec_keys, seg_sampling, seg_keys):
         with activation_rules(rules):
             # prefill lane: a packed chunk of prompt segments, K/V committed
             # to each segment's blocks in-program (no separate commit)
@@ -353,17 +363,17 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
                     params, k_pool, v_pool, dec_tables, dec_lengths,
                     dec_tokens, attn_backend=decode_attn_backend,
                     attn_interpret=interpret)
-        # greedy sampling fused for all lanes: seg_next[s] is the first
+        # keyed sampling fused for all lanes: seg_next[s] is the first
         # token of segment s's request, valid only when that segment
         # completes its prompt (the host consumes it exactly then)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        seg_next = jnp.argmax(ch_logits[0], -1).astype(jnp.int32)
+        nxt = sample_tokens(logits[:, -1], dec_sampling, dec_keys)
+        seg_next = sample_tokens(ch_logits[0], seg_sampling, seg_keys)
         return nxt, seg_next, k_pool, v_pool
 
     return jax.jit(
         unified_step,
         in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
-                      row_shard, None, None, None),
+                      row_shard, None, None, None, None, None, None, None),
         out_shardings=(None, None, pool_shard, pool_shard),
         donate_argnums=(1, 2),
     )
@@ -372,7 +382,8 @@ def jit_unified_step(model, mesh: Mesh, rules: ShardingRules,
 def jit_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
                          decode_attn_backend: str = "xla",
                          decode_matmul_table=None, interpret: bool = True):
-    """(params, k_pool, v_pool, dec_tables, dec_lengths, dec_tokens)
+    """(params, k_pool, v_pool, dec_tables, dec_lengths, dec_tokens,
+        dec_sampling, dec_keys)
         -> (dec_next (slots,), k_pool, v_pool)
 
     The decode-only fast path: the unified step's decode lane compiled
@@ -395,20 +406,20 @@ def jit_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
     def decode_only_step(params, k_pool, v_pool, dec_tables, dec_lengths,
-                         dec_tokens):
+                         dec_tokens, dec_sampling, dec_keys):
         with activation_rules(rules):
             with matmul_dispatch(decode_matmul_table, interpret=interpret):
                 logits, k_pool, v_pool = model.decode_step_paged(
                     params, k_pool, v_pool, dec_tables, dec_lengths,
                     dec_tokens, attn_backend=decode_attn_backend,
                     attn_interpret=interpret)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        nxt = sample_tokens(logits[:, -1], dec_sampling, dec_keys)
         return nxt, k_pool, v_pool
 
     return jax.jit(
         decode_only_step,
         in_shardings=(p_shard, pool_shard, pool_shard, row_shard, slot_shard,
-                      row_shard),
+                      row_shard, None, None),
         out_shardings=(None, pool_shard, pool_shard),
         donate_argnums=(1, 2),
     )
@@ -469,7 +480,9 @@ def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
                          interpret: bool = True):
     """(params, conv_pool, ssm_pool,
         dec_state_idx, dec_tokens,                # decode lane: every slot
-        ch_tokens, ch_state_idx, ch_seg_len, ch_seg_start)  # prefill lane
+        ch_tokens, ch_state_idx, ch_seg_len, ch_seg_start,  # prefill lane
+        dec_sampling, dec_keys,                   # per-slot sampling (traced)
+        ch_sampling, ch_keys)                     # (1, 3) chunk sampling
         -> (dec_next (slots,), ch_next (), conv_pool, ssm_pool)
 
     THE ssm serving step for steps that carry prompt work: one C-token
@@ -482,8 +495,11 @@ def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
     freely.  Every index is traced data: admission, chunk progress,
     retirement, preemption and resume never recompile, and `ch_seg_start
     == 0` selects zero carries in-program so a freshly claimed row needs no
-    zeroing pass.  `ch_next` is the segment's next-token argmax, consumed
-    by the host only when the segment completes its prompt."""
+    zeroing pass.  `ch_next` is the segment's next-token sample, consumed
+    by the host only when the segment completes its prompt.  Sampling is
+    fused exactly as in the paged steps (`repro.kernels.sampling`): the
+    per-slot / per-chunk sampling and key arrays are traced data, greedy
+    rows reduce bitwise to the argmax path."""
     rules = prune_for_mesh(rules, mesh)
     p_shard, _ = make_state_shardings(model, mesh, rules, None)
     conv_shard, ssm_shard = slot_state_shardings(model, mesh, rules)
@@ -492,7 +508,8 @@ def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
 
     def ssm_unified_step(params, conv_pool, ssm_pool, dec_state_idx,
                          dec_tokens, ch_tokens, ch_state_idx, ch_seg_len,
-                         ch_seg_start):
+                         ch_seg_start, dec_sampling, dec_keys, ch_sampling,
+                         ch_keys):
         with activation_rules(rules):
             # prefill lane: one prompt segment, state committed in-program
             with matmul_dispatch(chunk_matmul_table, interpret=interpret):
@@ -503,14 +520,14 @@ def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
             with matmul_dispatch(decode_matmul_table, interpret=interpret):
                 logits, conv_pool, ssm_pool = model.decode_step_slots(
                     params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        ch_next = jnp.argmax(ch_logits[0, -1], -1).astype(jnp.int32)
+        nxt = sample_tokens(logits[:, -1], dec_sampling, dec_keys)
+        ch_next = sample_tokens(ch_logits[:, -1], ch_sampling, ch_keys)[0]
         return nxt, ch_next, conv_pool, ssm_pool
 
     return jax.jit(
         ssm_unified_step,
         in_shardings=(p_shard, conv_shard, ssm_shard, slot_shard, row_shard,
-                      None, None, None, None),
+                      None, None, None, None, None, None, None, None),
         out_shardings=(None, None, conv_shard, ssm_shard),
         donate_argnums=(1, 2),
     )
@@ -519,7 +536,8 @@ def jit_ssm_unified_step(model, mesh: Mesh, rules: ShardingRules,
 def jit_ssm_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
                              decode_matmul_table=None,
                              interpret: bool = True):
-    """(params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
+    """(params, conv_pool, ssm_pool, dec_state_idx, dec_tokens,
+        dec_sampling, dec_keys)
         -> (dec_next (slots,), conv_pool, ssm_pool)
 
     The ssm decode-only fast path: the unified step's decode lane compiled
@@ -535,17 +553,18 @@ def jit_ssm_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
     row_shard = NamedSharding(mesh, rules.spec(("batch", None)))
 
     def ssm_decode_only_step(params, conv_pool, ssm_pool, dec_state_idx,
-                             dec_tokens):
+                             dec_tokens, dec_sampling, dec_keys):
         with activation_rules(rules):
             with matmul_dispatch(decode_matmul_table, interpret=interpret):
                 logits, conv_pool, ssm_pool = model.decode_step_slots(
                     params, conv_pool, ssm_pool, dec_state_idx, dec_tokens)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        nxt = sample_tokens(logits[:, -1], dec_sampling, dec_keys)
         return nxt, conv_pool, ssm_pool
 
     return jax.jit(
         ssm_decode_only_step,
-        in_shardings=(p_shard, conv_shard, ssm_shard, slot_shard, row_shard),
+        in_shardings=(p_shard, conv_shard, ssm_shard, slot_shard, row_shard,
+                      None, None),
         out_shardings=(None, conv_shard, ssm_shard),
         donate_argnums=(1, 2),
     )

@@ -15,6 +15,7 @@ from repro.serve.router import (
     serve_stages,
 )
 from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+from repro.serve.sampling import GREEDY, SamplingParams, truncate_at_eos
 from repro.serve.scheduler import ContinuousScheduler, PagedCapacity, ServeRequest
 from repro.serve.statecache import (
     SlotAllocator,
@@ -37,6 +38,7 @@ __all__ = [
     "DecoderFamilyAdapter",
     "FAMILY_STAGES",
     "FixedBatchEngine",
+    "GREEDY",
     "KVCacheConfig",
     "NULL_RECORDER",
     "PagedCapacity",
@@ -45,6 +47,7 @@ __all__ = [
     "Request",
     "RuntimeConfig",
     "SSMFamilyAdapter",
+    "SamplingParams",
     "ServeConfig",
     "ServeEngine",
     "ServeMetrics",
@@ -60,5 +63,6 @@ __all__ = [
     "percentile",
     "resolve_family_adapter",
     "serve_stages",
+    "truncate_at_eos",
     "write_trace",
 ]

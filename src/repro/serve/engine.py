@@ -36,6 +36,8 @@ import numpy as np
 
 from repro.distributed.sharding import ShardingRules
 from repro.launch.steps import jit_prefill_step, jit_serve_step
+from repro.serve.sampling import (SamplingParams, batch_sampling_arrays,
+                                  sample_host, truncate_at_eos)
 
 
 @dataclasses.dataclass
@@ -52,6 +54,8 @@ class Request:
     prompt: np.ndarray                      # (S,) int32
     output: List[int] = dataclasses.field(default_factory=list)
     latency_s: float = 0.0
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
 
 
 class FixedBatchEngine:
@@ -79,9 +83,15 @@ class FixedBatchEngine:
         self.stats = {"requests": 0, "tokens_out": 0, "decode_s": 0.0,
                       "prefill_s": 0.0}
 
-    def submit(self, prompt: np.ndarray) -> int:
+    def submit(self, prompt: np.ndarray,
+               sampling: Optional[SamplingParams] = None) -> int:
+        sampling = sampling if sampling is not None else SamplingParams()
+        bad = sampling.invalid_reason()
+        if bad is not None:
+            raise ValueError(f"invalid sampling params: {bad}")
         self._rid += 1
-        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32)))
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  sampling=sampling))
         return self._rid
 
     def _build(self, prompt_len: int):
@@ -110,34 +120,43 @@ class FixedBatchEngine:
                 if self._prefill is None:
                     self._build(plen)
 
-                t0 = time.perf_counter()
+                # keyed sampling arrays at token index 0 (the prefill
+                # sample); greedy requests stay on the bitwise argmax path
+                sp, ks = batch_sampling_arrays(batch_reqs, cfg.batch_size)
+
+                t_batch0 = time.perf_counter()
                 batch = {"tokens": jnp.asarray(toks)}
                 for k, v in self.extras.items():
                     batch[k] = jnp.broadcast_to(
                         jnp.asarray(v)[None], (cfg.batch_size,) + v.shape)
                 logits, cache = self._prefill(self.params, batch)
-                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                self.stats["prefill_s"] += time.perf_counter() - t0
+                nxt = sample_host(logits[:, -1], sp, ks)
+                outs = [np.asarray(nxt)]           # forces device sync
+                tok_t = [time.perf_counter()]
+                self.stats["prefill_s"] += tok_t[0] - t_batch0
 
                 t0 = time.perf_counter()
-                outs = [nxt]
-                for _ in range(cfg.max_new_tokens - 1):
+                for j in range(1, cfg.max_new_tokens):
                     logits, cache = self._decode(self.params, cache, nxt[:, None])
-                    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-                    outs.append(nxt)
-                out_tokens = np.stack([np.asarray(o) for o in outs], 1)
-                dt = time.perf_counter() - t0
-                self.stats["decode_s"] += dt
+                    ks[:, 2] = j                   # token index advances
+                    nxt = sample_host(logits[:, -1], sp, ks)
+                    outs.append(np.asarray(nxt))
+                    tok_t.append(time.perf_counter())
+                out_tokens = np.stack(outs, 1)
+                self.stats["decode_s"] += time.perf_counter() - t0
 
                 for i, r in enumerate(batch_reqs):
-                    seq = out_tokens[i].tolist()
-                    if cfg.eos_id >= 0 and cfg.eos_id in seq:
-                        seq = seq[: seq.index(cfg.eos_id) + 1]
-                    r.output = seq
-                    r.latency_s = dt
+                    r.output = truncate_at_eos(out_tokens[i].tolist(),
+                                               cfg.eos_id)
+                    # latency is THIS request's: batch start to the step
+                    # that emitted its last surviving token (eos-truncated
+                    # requests stop accruing at their eos step, even though
+                    # the fixed batch keeps draining)
+                    r.latency_s = tok_t[len(r.output) - 1] - t_batch0
                     done.append(r)
+                    # count tokens actually emitted, not the drain budget
+                    self.stats["tokens_out"] += len(r.output)
                 self.stats["requests"] += n
-                self.stats["tokens_out"] += n * cfg.max_new_tokens
         return done
 
     def throughput(self) -> float:
@@ -176,8 +195,9 @@ class ServeEngine:
         self.stats = {"requests": 0, "tokens_out": 0, "decode_s": 0.0,
                       "prefill_s": 0.0}
 
-    def submit(self, prompt: np.ndarray) -> int:
-        return self._engine.submit(prompt)
+    def submit(self, prompt: np.ndarray,
+               sampling: Optional[SamplingParams] = None) -> int:
+        return self._engine.submit(prompt, sampling=sampling)
 
     def run(self) -> List[Request]:
         if not self._continuous:

@@ -36,8 +36,15 @@ The adapter protocol (duck-typed; both classes implement it):
     claim_chunk(req) -> bool                  cover a prompt chunk dispatch
     swap_out(rid) -> nbytes                   device state -> host buffer
     resume_commit(req) -> nbytes              host buffer -> device state
-    dispatch(params, dec_rids, lengths, last_tok, chunks)
+    dispatch(params, dec_rids, lengths, last_tok, chunks,
+             dec_sampling, dec_keys)
                         -> (next_tokens (slots,), seg_next | None)
+
+The engine hands `dispatch` the decode lane's per-slot sampling/key arrays
+(built by `repro.serve.sampling.slot_sampling_arrays`); each adapter packs
+the chunk lane's per-segment arrays itself (token index 0 — a segment's
+sample is the request's FIRST token) and threads both into its step
+programs as traced data.
 
 The engine reads `_unified` / `_decode_only` / `_commit` off the adapter
 for compile-count accounting (each is a jitted program whose
@@ -65,6 +72,7 @@ from repro.launch.steps import (
 )
 from repro.serve.kvcache import NULL_BLOCK, PagedKVCache
 from repro.serve.router import PlanRouter, serve_stages
+from repro.serve.sampling import segment_sampling_arrays
 from repro.serve.scheduler import PagedCapacity, ServeRequest
 from repro.serve.statecache import SlotStateCache, SlotCapacity
 
@@ -223,7 +231,8 @@ class DecoderFamilyAdapter:
 
     def dispatch(self, params, dec_rids: List[Optional[int]],
                  lengths: np.ndarray, last_tok: np.ndarray,
-                 chunks: List[Tuple[ServeRequest, int, int]]):
+                 chunks: List[Tuple[ServeRequest, int, int]],
+                 dec_sampling: np.ndarray, dec_keys: np.ndarray):
         """Run ONE step program invocation: the unified step when `chunks`
         carries prompt work, else the decode-only fast path.  Returns the
         decode lane's next tokens (host, (slots,)) and the chunk segments'
@@ -231,18 +240,23 @@ class DecoderFamilyAdapter:
         bt = jnp.asarray(self.cache.table_array(dec_rids))
         lens = jnp.asarray(lengths)
         tokens = jnp.asarray(last_tok[:, None])
+        dsp = jnp.asarray(dec_sampling)
+        dks = jnp.asarray(dec_keys)
         if chunks:
             ch_toks, seg_tables, seg_info = self._chunk_inputs(chunks)
+            seg_sp, seg_ks = segment_sampling_arrays(chunks,
+                                                     self.chunk_segments)
             nxt_dev, seg_next_dev, self.cache.k, self.cache.v = self._unified(
                 params, self.cache.k, self.cache.v, bt, lens, tokens,
                 jnp.asarray(ch_toks), jnp.asarray(seg_tables),
-                jnp.asarray(seg_info))
+                jnp.asarray(seg_info), dsp, dks,
+                jnp.asarray(seg_sp), jnp.asarray(seg_ks))
             nxt = np.asarray(nxt_dev, np.int32)
             return nxt, np.asarray(seg_next_dev, np.int32)
         # decode-only fast path: no prompt work pending, so the step
         # skips the chunk-wide forward instead of masking it
         nxt_dev, self.cache.k, self.cache.v = self._decode_only(
-            params, self.cache.k, self.cache.v, bt, lens, tokens)
+            params, self.cache.k, self.cache.v, bt, lens, tokens, dsp, dks)
         return np.asarray(nxt_dev, np.int32), None
 
     def occupancy(self) -> float:
@@ -338,7 +352,8 @@ class SSMFamilyAdapter:
     # ------------------------------------------------------------- dispatch
     def dispatch(self, params, dec_rids: List[Optional[int]],
                  lengths: np.ndarray, last_tok: np.ndarray,
-                 chunks: List[Tuple[ServeRequest, int, int]]):
+                 chunks: List[Tuple[ServeRequest, int, int]],
+                 dec_sampling: np.ndarray, dec_keys: np.ndarray):
         """One ssm step program invocation.  The decode lane maps each slot
         to its state row (`index_array`; idle/prefilling slots hit the null
         row); the chunk lane carries at most ONE segment (packing width 1).
@@ -346,20 +361,25 @@ class SSMFamilyAdapter:
         Python-int path can never trace a second executable."""
         state_idx = jnp.asarray(self.cache.index_array(dec_rids))
         tokens = jnp.asarray(last_tok[:, None])
+        dsp = jnp.asarray(dec_sampling)
+        dks = jnp.asarray(dec_keys)
         if chunks:
             req, start, n = chunks[0]
             ch_toks = np.zeros((1, self.chunk_width), np.int32)
             ch_toks[0, :n] = req.prompt[start:start + n]
             row = self.cache.alloc.slot_of(req.rid)
+            ch_sp, ch_ks = segment_sampling_arrays(chunks, 1)
             nxt_dev, ch_next_dev, self.cache.conv, self.cache.ssm = \
                 self._unified(
                     params, self.cache.conv, self.cache.ssm, state_idx,
                     tokens, jnp.asarray(ch_toks), np.int32(row),
-                    np.int32(n), np.int32(start))
+                    np.int32(n), np.int32(start), dsp, dks,
+                    jnp.asarray(ch_sp), jnp.asarray(ch_ks))
             nxt = np.asarray(nxt_dev, np.int32)
             return nxt, np.asarray(ch_next_dev, np.int32).reshape(1)
         nxt_dev, self.cache.conv, self.cache.ssm = self._decode_only(
-            params, self.cache.conv, self.cache.ssm, state_idx, tokens)
+            params, self.cache.conv, self.cache.ssm, state_idx, tokens,
+            dsp, dks)
         return np.asarray(nxt_dev, np.int32), None
 
     def occupancy(self) -> float:

@@ -112,6 +112,8 @@ from repro.serve.family import resolve_family_adapter
 from repro.serve.kvcache import KVCacheConfig
 from repro.serve.metrics import ServeMetrics
 from repro.serve.router import DEFAULT_CHUNK_TOKENS, PlanRouter
+from repro.serve.sampling import (SamplingParams, slot_sampling_arrays,
+                                  truncate_at_eos)
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 from repro.serve.statecache import StateCacheConfig
 from repro.serve.trace import NULL_RECORDER, TraceRecorder
@@ -244,7 +246,8 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------ interface
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
-               arrival_time: Optional[float] = None) -> int:
+               arrival_time: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None) -> int:
         self._rid += 1
         if max_new_tokens is None:
             max_new_tokens = self.cfg.max_new_tokens
@@ -252,7 +255,8 @@ class ContinuousEngine:
             rid=self._rid, prompt=np.asarray(prompt, np.int32),
             max_new_tokens=max_new_tokens,
             arrival_time=(arrival_time if arrival_time is not None
-                          else self.now_fn()))
+                          else self.now_fn()),
+            sampling=sampling if sampling is not None else SamplingParams())
         self.scheduler.submit(req)
         return self._rid
 
@@ -356,7 +360,21 @@ class ContinuousEngine:
     def _finished(self, req: ServeRequest) -> bool:
         if len(req.output) >= req.max_new_tokens:
             return True
-        return self.cfg.eos_id >= 0 and req.output[-1] == self.cfg.eos_id
+        # stop-at-first-eos ANYWHERE in the stream, the same rule
+        # `truncate_at_eos` applies at retirement — not just when eos is
+        # the latest token, so the two definitions cannot diverge
+        return self.cfg.eos_id >= 0 and self.cfg.eos_id in req.output
+
+    def _retire(self, req: ServeRequest, now: float) -> None:
+        """Retire a finished request: truncate its stream at the first eos
+        (the shared `truncate_at_eos` rule — so the finish event's digest
+        and n_output describe the stream callers actually receive), then
+        release the slot and record completion."""
+        slot = req.slot
+        req.output = truncate_at_eos(req.output, self.cfg.eos_id)
+        self.scheduler.retire(req, now)
+        self._reset_slot(slot)
+        self._complete(req)
 
     def _complete(self, req: ServeRequest) -> None:
         self.metrics.record_completion(req.latency_s, len(req.output))
@@ -428,9 +446,15 @@ class ContinuousEngine:
             prog = self._unified if chunks else self._decode_only
             n_compiled = prog._cache_size()
 
+        # per-slot sampling knobs + PRNG key triples for the decode lane,
+        # rebuilt each step from slot residency (pure data — the arrays are
+        # traced inputs, so per-request sampling never retraces a program)
+        dec_sampling, dec_keys = slot_sampling_arrays(self.scheduler.slots)
+
         t0 = time.perf_counter()
         nxt, seg_next = self.adapter.dispatch(
-            self.params, dec_rids, self._lengths, self._last_tok, chunks)
+            self.params, dec_rids, self._lengths, self._last_tok, chunks,
+            dec_sampling, dec_keys)
         step_s = time.perf_counter() - t0
         if trace.enabled and prog._cache_size() > n_compiled:
             trace.emit("compile", program=kind, device_s=step_s)
@@ -468,9 +492,7 @@ class ContinuousEngine:
                     self._lengths[slot] = req.prompt_len
                     self._last_tok[slot] = first
                     if self._finished(req):
-                        self.scheduler.retire(req, now)
-                        self._reset_slot(slot)
-                        self._complete(req)
+                        self._retire(req, now)
         elif decoding:
             self.metrics.record_decode_only_step()
 
@@ -487,7 +509,5 @@ class ContinuousEngine:
                     trace.emit("decode_token", t=now, rid=req.rid,
                                token=int(nxt[slot]))
                 if self._finished(req):
-                    self.scheduler.retire(req, now)
-                    self._reset_slot(slot)
-                    self._complete(req)
+                    self._retire(req, now)
         return True

@@ -1,0 +1,160 @@
+"""Per-request sampling policy: `SamplingParams` and the host-side packing.
+
+The device routine lives in `repro.kernels.sampling` (fused into the four
+serving step programs as traced data — see that module for the array
+conventions and the determinism contract).  This module is everything the
+HOST does with it:
+
+  * `SamplingParams` — the submit-time knobs a request carries through its
+    whole life (scheduler queue, slot residency, preemption/resume, the
+    fixed-batch drain).  temperature=0 (the default) is greedy and reduces
+    bitwise to the pre-sampling argmax path.
+  * array builders — pack per-slot / per-segment / per-batch (rows, 3)
+    float32 sampling and (rows, 3) int32 [seed, rid, token_index] key
+    arrays.  Rows without an active sampled request are greedy
+    (temperature 0), so idle/prefilling slots keep producing the same
+    discarded argmax garbage they always did.
+  * `sample_host` — the SAME routine under a standalone jit, used by
+    `FixedBatchEngine` so the differential baseline draws bitwise
+    identical tokens to the fused step programs.
+  * `truncate_at_eos` — the one stop-at-first-eos definition BOTH engines
+    share (`FixedBatchEngine.run` truncation and `ContinuousEngine`
+    retirement), so eos semantics cannot diverge between the continuous
+    runtime and its baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sampling import sample_tokens
+
+_INT32_MAX = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Submit-time sampling knobs for one request.
+
+    temperature: 0 (default) = greedy argmax, bitwise the pre-sampling
+        path; > 0 scales the logits before the draw.
+    top_k: keep only the k largest logits (0 = off).
+    top_p: keep the minimal nucleus of tokens covering probability mass
+        top_p (1.0 = off).
+    seed: the request's stream seed.  Token i of the request is drawn
+        under the key (seed, rid, i) — replay with the same triple is
+        bitwise identical regardless of batching, chunking or preemption.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def invalid_reason(self) -> Optional[str]:
+        """Reject reason, or None when the params are servable (mirrors
+        the scheduler's other submit guards)."""
+        if not math.isfinite(self.temperature) or self.temperature < 0:
+            return f"temperature must be finite and >= 0, got {self.temperature}"
+        if self.top_k < 0:
+            return f"top_k must be >= 0, got {self.top_k}"
+        if not (0.0 < self.top_p <= 1.0):
+            return f"top_p must be in (0, 1], got {self.top_p}"
+        if not (0 <= self.seed <= _INT32_MAX):
+            return f"seed must fit int32 (0 <= seed < 2**31), got {self.seed}"
+        return None
+
+
+GREEDY = SamplingParams()
+
+
+# ------------------------------------------------------------ array packing
+def _greedy_arrays(rows: int) -> Tuple[np.ndarray, np.ndarray]:
+    sp = np.zeros((rows, 3), np.float32)
+    sp[:, 2] = 1.0                        # top_p off
+    ks = np.zeros((rows, 3), np.int32)
+    return sp, ks
+
+
+def _fill_row(sp: np.ndarray, ks: np.ndarray, i: int, s: SamplingParams,
+              rid: int, token_index: int) -> None:
+    sp[i, 0] = s.temperature
+    sp[i, 1] = float(s.top_k)
+    sp[i, 2] = s.top_p
+    ks[i, 0] = s.seed
+    ks[i, 1] = rid
+    ks[i, 2] = token_index
+
+
+def slot_sampling_arrays(slots) -> Tuple[np.ndarray, np.ndarray]:
+    """Decode-lane arrays for the continuous engine: one row per slot.
+    Empty and still-prefilling slots stay greedy with a zero key — their
+    decode row is masked to the sink and its token discarded, exactly as
+    before.  The token index is the request's CURRENT output length (the
+    index the next decode token will land at), so the key stream is a pure
+    function of request progress and survives preemption/resume for
+    free."""
+    sp, ks = _greedy_arrays(len(slots))
+    for i, req in enumerate(slots):
+        if req is None or req.prefilling:
+            continue
+        _fill_row(sp, ks, i, req.sampling, req.rid, len(req.output))
+    return sp, ks
+
+
+def segment_sampling_arrays(chunks: Sequence[tuple],
+                            n_segments: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Chunk-lane arrays: one row per packed segment slot.  A segment's
+    sample is only consumed when that chunk completes its prompt, i.e. it
+    draws the request's FIRST token — token index 0.  Idle segment slots
+    are greedy."""
+    sp, ks = _greedy_arrays(n_segments)
+    for i, (req, _start, _n) in enumerate(chunks):
+        _fill_row(sp, ks, i, req.sampling, req.rid, 0)
+    return sp, ks
+
+
+def batch_sampling_arrays(reqs, width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Fixed-batch arrays at token index 0 (the prefill sample); the drain
+    loop advances column 2 in place per decode iteration.  Padding rows
+    past len(reqs) are greedy."""
+    sp, ks = _greedy_arrays(width)
+    for i, r in enumerate(reqs):
+        _fill_row(sp, ks, i, r.sampling, r.rid, 0)
+    return sp, ks
+
+
+# ------------------------------------------------------------- host sampler
+@functools.lru_cache(maxsize=1)
+def _jitted_sampler():
+    # built lazily so importing this module never touches the backend
+    return jax.jit(sample_tokens)
+
+
+def sample_host(logits, sampling: np.ndarray, keys: np.ndarray):
+    """The keyed sampler as a standalone jitted call for the fixed-batch
+    baseline: same routine, same float program per row, so its tokens are
+    bitwise identical to the fused step programs' on identical logits."""
+    return _jitted_sampler()(logits, jnp.asarray(sampling), jnp.asarray(keys))
+
+
+# ------------------------------------------------------------ eos semantics
+def truncate_at_eos(seq: Sequence[int], eos_id: int) -> List[int]:
+    """Stop-at-first-eos: the single definition of eos truncation both
+    engines share.  Tokens past the first eos (and the eos itself stays)
+    are dropped; eos_id < 0 disables early stopping."""
+    seq = list(seq)
+    if eos_id < 0 or eos_id not in seq:
+        return seq
+    return seq[: seq.index(eos_id) + 1]

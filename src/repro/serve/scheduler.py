@@ -47,7 +47,8 @@ from typing import Deque, List, Optional
 import numpy as np
 
 from repro.serve.kvcache import BlockAllocator, KVCacheConfig
-from repro.serve.trace import NULL_RECORDER
+from repro.serve.sampling import SamplingParams
+from repro.serve.trace import NULL_RECORDER, stream_digest
 
 
 @dataclasses.dataclass
@@ -56,6 +57,11 @@ class ServeRequest:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int
     arrival_time: float = 0.0
+    # submit-time sampling knobs; the default is greedy (temperature 0),
+    # which is bitwise the pre-sampling argmax path.  The params ride on
+    # the request through its whole life — slot residency, preemption,
+    # resume — so per-token keys (seed, rid, token_index) never drift.
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     # lifecycle timestamps (engine clock)
     admitted_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -230,13 +236,25 @@ class ContinuousScheduler:
             self._reject(req, "max_new_tokens must be >= 1")
         if req.prompt_len < 1:
             self._reject(req, "empty prompt")
+        bad = req.sampling.invalid_reason()
+        if bad is not None:
+            self._reject(req, bad)
         reason = self.capacity.submit_reason(req)
         if reason is not None:
             self._reject(req, reason)
         self.waiting.append(req)
+        # sampled submits carry their knobs (incl. the per-request seed) in
+        # the trace, so a recorded run is exactly replayable; the audit
+        # layer checks the seed is present whenever temperature > 0
+        extra = {}
+        if not req.sampling.greedy:
+            s = req.sampling
+            extra = dict(temperature=s.temperature, top_k=s.top_k,
+                         top_p=s.top_p, seed=s.seed)
         self.trace.emit("submit", rid=req.rid, arrival=req.arrival_time,
                         prompt_len=req.prompt_len,
-                        max_new=req.max_new_tokens, family=self.family)
+                        max_new=req.max_new_tokens, family=self.family,
+                        **extra)
 
     def admit(self, now: float) -> List[ServeRequest]:
         """Move waiting/preempted requests into free slots; returns the
@@ -363,5 +381,8 @@ class ContinuousScheduler:
         assert req.slot is not None and self.slots[req.slot] is req
         self.slots[req.slot] = None
         req.slot = None
+        # the finish event pins the whole token stream via a digest the
+        # replay audit recomputes from first_token/decode_token events
         self.trace.emit("finish", t=now, rid=req.rid,
-                        n_output=len(req.output), family=self.family)
+                        n_output=len(req.output),
+                        digest=stream_digest(req.output), family=self.family)

@@ -47,13 +47,15 @@ from typing import Any, Dict, List, Optional, Tuple
 EVENT_TYPES = frozenset({
     # request lifecycle (scheduler.py / runtime.py)
     "submit",          # rid, arrival, prompt_len, max_new
+                       #   [+ temperature, top_k, top_p, seed when sampled]
     "reject",          # rid, reason
     "admit",           # rid, slot, kind ("fresh"|"resume"[, stall_s])
     "chunk_scheduled",  # rid, start, n        (one per packed segment)
     "chunk_committed",  # rid, start, n, prefilled
     "first_token",     # rid, token
     "decode_token",    # rid, token
-    "finish",          # rid, n_output        (the terminal event)
+    "finish",          # rid, n_output, digest  (the terminal event; digest
+                       #   = stream_digest of the full output stream)
     # preemption / swap (runtime.py / kvcache.py)
     "preempt",         # rid, slot
     "swap_out",        # rid, nbytes, n_blocks
@@ -69,6 +71,22 @@ EVENT_TYPES = frozenset({
     "step_end",        # step, kind, ... as begin, plus device_s
     "compile",         # program ("unified"|"decode_only"|"commit"), device_s
 })
+
+
+def stream_digest(tokens) -> str:
+    """Order-sensitive 64-bit FNV-1a digest of a token stream, hex-encoded.
+
+    Stamped on every `finish` event so a trace pins the exact bytes of each
+    request's output, not just its length; the audit layer recomputes it
+    from the per-token events (`first_token` + `decode_token` in stream
+    order) and flags any divergence.  With keyed sampling this is what
+    makes a recorded sampled run *checkably* replayable."""
+    h = 0xCBF29CE484222325
+    for t in tokens:
+        for b in int(t).to_bytes(4, "little", signed=True):
+            h ^= b
+            h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return f"{h:016x}"
 
 
 @dataclasses.dataclass

@@ -17,6 +17,12 @@ recomputable from the event stream alone.  Checks:
     `n_output`, and committed `chunk_committed` tokens reproduce
     `chunk_tokens_committed` (each request's chunks covering exactly
     [0, prompt_len) in order);
+  * **sampling** — each `finish` event's `digest` (FNV-1a over the token
+    stream, stamped at retirement) matches the digest recomputed from the
+    `first_token`/`decode_token` events' token values, pinning that the
+    trace records the EXACT stream a replay must reproduce; and every
+    sampled submit (temperature > 0) carries its `seed`, without which a
+    recorded run is not replayable;
   * **pool** — replaying `block_alloc` / `block_extend` / `block_free`
     against a free-block counter reproduces every event's recorded
     `free_after`, no request's holding goes negative, and a completed run
@@ -49,7 +55,8 @@ import math
 import sys
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.serve.trace import TraceEvent, metrics_snapshot, to_chrome_trace
+from repro.serve.trace import (TraceEvent, metrics_snapshot, stream_digest,
+                               to_chrome_trace)
 
 _TOL = 1e-6
 
@@ -71,6 +78,12 @@ class Lifecycle:
     first_tokens: int = 0
     chunks: List[Tuple[float, int, int]] = dataclasses.field(
         default_factory=list)   # (t, start, n) per chunk_committed
+    # sampled-replay state: the token values in emission order, the finish
+    # event's stream digest, and whether the submit carried sampling knobs
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    digest: Optional[str] = None
+    sampled: bool = False
+    has_seed: bool = False
 
     # ------------------------------------------------- event-derived timing
     @property
@@ -137,6 +150,8 @@ def build_lifecycles(events: List[TraceEvent]) -> Dict[int, Lifecycle]:
             x.submit_t = e.t
             x.arrival = e.fields.get("arrival", e.t)
             x.prompt_len = e.fields.get("prompt_len")
+            x.sampled = e.fields.get("temperature", 0.0) > 0.0
+            x.has_seed = "seed" in e.fields
         elif e.name == "admit":
             x = lc(r)
             x.admits.append((e.t, e.fields.get("kind", "fresh")))
@@ -149,8 +164,13 @@ def build_lifecycles(events: List[TraceEvent]) -> Dict[int, Lifecycle]:
             x.first_tokens += 1
             if x.first_token_t is None:
                 x.first_token_t = e.t
+            if "token" in e.fields:
+                x.tokens.append(int(e.fields["token"]))
         elif e.name == "decode_token":
-            lc(r).decode_tokens += 1
+            x = lc(r)
+            x.decode_tokens += 1
+            if "token" in e.fields:
+                x.tokens.append(int(e.fields["token"]))
         elif e.name == "chunk_committed":
             lc(r).chunks.append((e.t, e.fields.get("start", 0),
                                  e.fields.get("n", 0)))
@@ -158,6 +178,7 @@ def build_lifecycles(events: List[TraceEvent]) -> Dict[int, Lifecycle]:
             x = lc(r)
             x.finish_t = e.t
             x.n_output = e.fields.get("n_output")
+            x.digest = e.fields.get("digest")
     return lcs
 
 
@@ -219,6 +240,20 @@ def _audit_lifecycles(lcs: Dict[int, Lifecycle],
             violations.append(
                 f"req {rid}: {x.first_tokens}+{x.decode_tokens} token events "
                 f"!= finish n_output {x.n_output}")
+        # replay pin: the finish digest must match the digest of the token
+        # VALUES the first_token/decode_token events recorded (only
+        # checkable when every token event carried its value)
+        if x.digest is not None \
+                and len(x.tokens) == x.first_tokens + x.decode_tokens:
+            got = stream_digest(x.tokens)
+            if got != x.digest:
+                violations.append(
+                    f"req {rid}: token-event digest {got} != finish "
+                    f"digest {x.digest} — trace does not pin the stream")
+        if x.sampled and not x.has_seed:
+            violations.append(
+                f"req {rid}: sampled submit (temperature > 0) without a "
+                "seed — run is not replayable from the trace")
         if len(x.stalls) != len(x.preempts):
             violations.append(f"req {rid}: {len(x.preempts)} preempts but "
                               f"{len(x.stalls)} resume intervals")
@@ -342,6 +377,7 @@ def audit(events: List[TraceEvent], metrics=None,
     _audit_pool(events, metadata, violations, checks)
     kinds = _audit_steps(events, violations, checks)
     checks["requests"] = len(lcs)
+    checks["sampled_requests"] = sum(1 for x in lcs.values() if x.sampled)
 
     # family consistency: one engine serves one family; absent tags are
     # pre-seam traces, i.e. the decoder family

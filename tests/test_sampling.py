@@ -1,0 +1,447 @@
+"""Fused per-slot sampling: property pins + sampled differential harness.
+
+The step programs now sample (temperature / top-k / top-p) in-program with
+per-slot knobs and per-slot PRNG keys carried as traced data.  These tests
+pin the contract from the bottom up:
+
+  * the pure sampler (repro.kernels.sampling): top-k keeps exactly k
+    logits, top-p keeps the MINIMAL nucleus, temperature 0 is bitwise
+    argmax even with top-k/top-p set, and the key derivation makes a
+    token's draw a pure function of (seed, rid, token_index) — independent
+    of row position or batch width;
+  * the differential harness, extended to sampled streams: a continuous
+    run over chunked / packed / preempted schedules must be byte-identical
+    to the FixedBatchEngine B=1 drain given the same per-request
+    SamplingParams, for BOTH families, still from exactly two compiled
+    step executables;
+  * the eos/stats bugfixes that block the harness: stop-at-first-eos is
+    one shared rule (`truncate_at_eos`) for both engines, tokens_out
+    counts tokens actually emitted, and latency is attributed per request;
+  * the trace contract: sampled submits carry their seed, finish events
+    pin the stream with a digest the audit recomputes from token events.
+"""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.kernels.sampling import derive_key, mask_top_k, mask_top_p
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    FixedBatchEngine,
+    RuntimeConfig,
+    SamplingParams,
+    ServeConfig,
+    TraceRecorder,
+    truncate_at_eos,
+)
+from repro.serve import traceview
+from repro.serve.sampling import batch_sampling_arrays, sample_host
+
+MAX_NEW = 10
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                           vocab=97)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reference_greedy(model, params, prompt, n_new, max_seq=64):
+    toks = jnp.asarray(prompt[None], jnp.int32)
+    logits, cache = model.prefill(params, {"tokens": toks}, max_seq=max_seq)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_new - 1):
+        nxt = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, cache, nxt)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def _mix(i):
+    """The bench's mixed-sampling cycle: greedy / pure temperature /
+    temperature+top-k / temperature+top-p, unique seed per request."""
+    r = i % 4
+    if r == 0:
+        return SamplingParams()
+    if r == 1:
+        return SamplingParams(temperature=0.8, seed=1000 + i)
+    if r == 2:
+        return SamplingParams(temperature=1.0, top_k=8, seed=1000 + i)
+    return SamplingParams(temperature=0.9, top_p=0.85, seed=1000 + i)
+
+
+# ---------------------------------------------------------- sampler pins
+def test_top_k_keeps_exactly_k_largest():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.permutation(41).astype(np.float32))  # all distinct
+    for k in (1, 2, 7, 40, 41):
+        kept = np.isfinite(np.asarray(mask_top_k(x, jnp.int32(k))))
+        assert kept.sum() == k
+        # the kept set IS the k largest
+        want = set(np.argsort(np.asarray(x))[-k:].tolist())
+        assert set(np.flatnonzero(kept).tolist()) == want
+    # k = 0 (off) and k >= vocab keep everything
+    for k in (0, 41, 1000):
+        kept = np.isfinite(np.asarray(mask_top_k(x, jnp.int32(k))))
+        assert kept.sum() == (41 if k == 0 or k >= 41 else k)
+
+
+def test_top_p_keeps_minimal_nucleus():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=53).astype(np.float32))
+    probs = np.asarray(jax.nn.softmax(x))
+    for p in (0.05, 0.3, 0.72, 0.95):
+        kept = np.isfinite(np.asarray(mask_top_p(x, jnp.float32(p))))
+        mass = probs[kept].sum()
+        assert mass >= p - 1e-6                      # covers the nucleus
+        # minimal: dropping the smallest kept prob dips below p
+        smallest = probs[kept].min()
+        assert mass - smallest < p
+    # p = 1.0 escapes entirely: the logits pass through untouched
+    assert np.array_equal(np.asarray(mask_top_p(x, jnp.float32(1.0))),
+                          np.asarray(x))
+
+
+def test_temperature_zero_is_bitwise_argmax_despite_knobs():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(6, 31)).astype(np.float32))
+    sp = np.zeros((6, 3), np.float32)
+    sp[:, 1] = 3.0                # top_k set — must be ignored at temp 0
+    sp[:, 2] = 0.4                # top_p set — must be ignored at temp 0
+    ks = np.stack([np.arange(6), np.arange(6), np.arange(6)], 1).astype(
+        np.int32)
+    out = np.asarray(sample_host(logits, sp, ks))
+    assert np.array_equal(out, np.asarray(jnp.argmax(logits, -1),
+                                          dtype=np.int32))
+
+
+def test_key_is_pure_function_of_seed_rid_index():
+    """The same (seed, rid, token_index) triple must draw the same token
+    wherever its row sits and whatever else shares the batch — this is
+    what makes sampled streams invariant to packing and preemption."""
+    rng = np.random.default_rng(3)
+    row = rng.normal(size=29).astype(np.float32)
+    sp_row = np.asarray([0.9, 0.0, 1.0], np.float32)
+    ks_row = np.asarray([42, 7, 5], np.int32)
+
+    def at(position, width):
+        logits = rng.normal(size=(width, 29)).astype(np.float32)
+        logits[position] = row
+        sp = np.zeros((width, 3), np.float32)
+        sp[:, 0] = 0.7            # other rows sample too, with other keys
+        sp[:, 2] = 1.0
+        sp[position] = sp_row
+        ks = np.stack([np.arange(width)] * 3, 1).astype(np.int32)
+        ks[position] = ks_row
+        return int(np.asarray(sample_host(jnp.asarray(logits), sp, ks))
+                   [position])
+
+    draws = {at(0, 1), at(0, 4), at(3, 4), at(5, 8)}
+    assert len(draws) == 1
+    # and fold_in keys actually separate: a different triple, same logits
+    k1 = derive_key(jnp.int32(42), jnp.int32(7), jnp.int32(5))
+    k2 = derive_key(jnp.int32(42), jnp.int32(7), jnp.int32(6))
+    assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_sampled_tokens_stay_inside_the_truncated_support():
+    rng = np.random.default_rng(4)
+    row = rng.normal(size=37).astype(np.float32)
+    n = 256
+    logits = jnp.asarray(np.tile(row, (n, 1)))
+    sp = np.zeros((n, 3), np.float32)
+    sp[:, 0] = 1.0
+    sp[:, 1] = 5.0                              # top_k = 5
+    sp[:, 2] = 1.0
+    ks = np.zeros((n, 3), np.int32)
+    ks[:, 0] = np.arange(n)                     # one seed per row
+    out = np.asarray(sample_host(logits, sp, ks))
+    top5 = set(np.argsort(row)[-5:].tolist())
+    assert set(out.tolist()) <= top5
+    assert len(set(out.tolist())) > 1           # it does actually sample
+
+
+def test_sampling_params_validation_rejected_by_both_engines(tiny_lm):
+    assert SamplingParams().invalid_reason() is None
+    assert SamplingParams(temperature=-1.0).invalid_reason()
+    assert SamplingParams(temperature=float("nan")).invalid_reason()
+    assert SamplingParams(top_k=-2).invalid_reason()
+    assert SamplingParams(top_p=0.0).invalid_reason()
+    assert SamplingParams(top_p=1.5).invalid_reason()
+    assert SamplingParams(seed=2**31).invalid_reason()
+
+    cfg, model, params = tiny_lm
+    mesh = single_device_mesh()
+    bad = SamplingParams(top_p=0.0)
+    prompt = np.arange(4, dtype=np.int32)
+    fixed = FixedBatchEngine(model, params, mesh, DEFAULT_RULES,
+                             ServeConfig(batch_size=1, max_seq=64,
+                                         max_new_tokens=2))
+    with pytest.raises(ValueError, match="top_p"):
+        fixed.submit(prompt, sampling=bad)
+    cont = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                            RuntimeConfig(max_slots=2, block_size=8,
+                                          max_blocks_per_seq=8,
+                                          max_new_tokens=2))
+    with pytest.raises(ValueError, match="top_p"):
+        cont.submit(prompt, sampling=bad)
+
+
+# -------------------------------------------------- sampled differentials
+def _decoder_engines(tiny_lm, eos_id=-1, trace=None):
+    cfg, model, params = tiny_lm
+    mesh = single_device_mesh()
+    # the family-seam preemption config: chunked prefill, packed segments,
+    # and block pressure that forces at least one preemption
+    eng = ContinuousEngine(
+        model, params, mesh, DEFAULT_RULES,
+        RuntimeConfig(max_slots=3, block_size=4, max_blocks_per_seq=8,
+                      num_blocks=10, chunk_tokens=8, chunk_segments=2,
+                      max_new_tokens=MAX_NEW, eos_id=eos_id),
+        trace=trace)
+    fixed = FixedBatchEngine(model, params, mesh, DEFAULT_RULES,
+                             ServeConfig(batch_size=1, max_seq=64,
+                                         max_new_tokens=MAX_NEW,
+                                         eos_id=eos_id))
+    return eng, fixed
+
+
+def test_decoder_sampled_streams_match_fixed_drain(tiny_lm):
+    """Same (seed, rid, token_index) triples on both engines: the sampled
+    continuous streams must be byte-identical to the B=1 drain across
+    chunking, packing and preemption — and at least one stream must
+    actually differ from greedy (the sampler is live, not a no-op)."""
+    cfg, model, params = tiny_lm
+    eng, fixed = _decoder_engines(tiny_lm)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (12, 11, 13, 12)]
+    samplings = [_mix(i) for i in range(len(prompts))]
+
+    for p, s in zip(prompts, samplings):
+        fixed.submit(p, sampling=s)
+    ref = {r.rid: r.output for r in fixed.run()}
+
+    for p, s in zip(prompts, samplings):
+        eng.submit(p, sampling=s)
+    done = {r.rid: r.output for r in eng.run()}
+
+    assert done == ref
+    assert eng.metrics.preemptions >= 1        # the schedule was adversarial
+    assert eng._unified._cache_size() == 1     # sampling is traced data:
+    assert eng._decode_only._cache_size() == 1  # still two executables
+    greedy = {rid: _reference_greedy(model, params, p, MAX_NEW)
+              for rid, p in enumerate(prompts, start=1)}
+    assert any(done[rid] != greedy[rid] for rid in done)
+    # ... while the greedy submits in the mix stayed bitwise greedy
+    for rid, s in enumerate(samplings, start=1):
+        if s.greedy:
+            assert done[rid] == greedy[rid]
+
+
+def test_explicit_temperature_zero_is_the_greedy_path(tiny_lm):
+    """temperature=0 with top-k/top-p set still reduces bitwise to the
+    pre-sampling argmax stream (the knobs only bite when sampling)."""
+    cfg, model, params = tiny_lm
+    eng, _ = _decoder_engines(tiny_lm)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (9, 14)]
+    for p in prompts:
+        eng.submit(p, sampling=SamplingParams(temperature=0.0, top_k=5,
+                                              top_p=0.5, seed=77))
+    done = {r.rid: r.output for r in eng.run()}
+    for rid, p in enumerate(prompts, start=1):
+        assert done[rid] == _reference_greedy(model, params, p, MAX_NEW)
+
+
+def test_ssm_sampled_streams_match_fixed_drain():
+    """The same sampled differential for the slot-pooled family, across a
+    state pool one row short of the slot count (forced state swap)."""
+    cfg = get_config("mamba2-2.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = single_device_mesh()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l in (5, 16, 32, 7)]
+    samplings = [_mix(i + 1) for i in range(len(prompts))]  # all non-greedy
+    max_new = 6
+
+    fixed = FixedBatchEngine(model, params, mesh, DEFAULT_RULES,
+                             ServeConfig(batch_size=1, max_seq=64,
+                                         max_new_tokens=max_new))
+    for p, s in zip(prompts, samplings):
+        fixed.submit(p, sampling=s)
+    ref = {r.rid: r.output for r in fixed.run()}
+
+    eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES,
+                           RuntimeConfig(max_slots=3, chunk_tokens=16,
+                                         max_new_tokens=max_new,
+                                         state_slots=3))
+    for p, s in zip(prompts, samplings):
+        eng.submit(p, arrival_time=0.0, sampling=s)
+    done = {r.rid: r.output for r in eng.run()}
+
+    assert done == ref
+    assert eng.metrics.preemptions >= 1
+    assert eng._unified._cache_size() == 1
+    assert eng._decode_only._cache_size() == 1
+
+
+# ------------------------------------------------------- eos / stats pins
+def test_fixed_batch_eos_truncation_stats_and_latency(tiny_lm):
+    """The satellite bugfixes: with an emittable eos, tokens_out counts
+    tokens actually emitted (not n * max_new_tokens), latency is
+    attributed per request (an early-stopping request reports less than a
+    batch mate that drained the full budget), and both engines share
+    stop-at-first-eos semantics."""
+    cfg, model, params = tiny_lm
+    mesh = single_device_mesh()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (12, 11)]
+
+    # the B=2 drain is its own ground truth (left-padded batched prefill
+    # is not bitwise the B=1 stream): run once with eos disabled to learn
+    # the full streams, then discover an eos the batch actually emits
+    # mid-stream, preferring one that truncates to DIFFERENT lengths
+    def b2_engine(eos_id):
+        return FixedBatchEngine(model, params, mesh, DEFAULT_RULES,
+                                ServeConfig(batch_size=2, max_seq=64,
+                                            max_new_tokens=MAX_NEW,
+                                            eos_id=eos_id))
+
+    full_eng = b2_engine(eos_id=-1)
+    for p in prompts:
+        full_eng.submit(p)
+    streams = [r.output for r in full_eng.run()]
+    assert all(len(s) == MAX_NEW for s in streams)
+    assert full_eng.stats["tokens_out"] == 2 * MAX_NEW
+
+    eos, lens = None, None
+    for cand in streams[0][:-1]:
+        l0 = len(truncate_at_eos(streams[0], cand))
+        l1 = len(truncate_at_eos(streams[1], cand))
+        if l0 < MAX_NEW or l1 < MAX_NEW:
+            eos, lens = cand, (l0, l1)
+            if l0 != l1:
+                break
+    assert eos is not None, "greedy stream never repeats a token?"
+
+    fixed = b2_engine(eos_id=eos)
+    for p in prompts:
+        fixed.submit(p)
+    done = {r.rid: r for r in fixed.run()}
+
+    for rid, (stream, want_len) in enumerate(zip(streams, lens), start=1):
+        assert done[rid].output == truncate_at_eos(stream, eos)
+        assert len(done[rid].output) == want_len
+    # tokens_out counts what was emitted, not the drain budget
+    assert fixed.stats["tokens_out"] == sum(lens)
+    assert fixed.stats["tokens_out"] < 2 * MAX_NEW
+    # latency is per-request: the earlier-stopping batch mate reports less
+    if lens[0] != lens[1]:
+        shorter = 1 if lens[0] < lens[1] else 2
+        longer = 3 - shorter
+        assert done[shorter].latency_s < done[longer].latency_s
+    for r in done.values():
+        assert r.latency_s > 0.0
+
+    # cross-engine eos semantics pin against the B=1-equivalent reference:
+    # the continuous engine's greedy streams are byte-identical to the
+    # unbatched drain, so the shared stop-at-first-eos rule must land both
+    # engines on the same truncation of the same streams
+    ref = [_reference_greedy(model, params, p, MAX_NEW) for p in prompts]
+    ceos, clens = None, None
+    for cand in ref[0][:-1]:
+        l0 = len(truncate_at_eos(ref[0], cand))
+        l1 = len(truncate_at_eos(ref[1], cand))
+        if l0 < MAX_NEW or l1 < MAX_NEW:
+            ceos, clens = cand, (l0, l1)
+            if l0 != l1:
+                break
+    assert ceos is not None
+
+    eng, b1 = _decoder_engines(tiny_lm, eos_id=ceos)
+    for p in prompts:
+        eng.submit(p)
+        b1.submit(p)
+    cont = {r.rid: r.output for r in eng.run()}
+    b1_done = {r.rid: r for r in b1.run()}
+    for rid, (stream, want_len) in enumerate(zip(ref, clens), start=1):
+        assert cont[rid] == truncate_at_eos(stream, ceos)
+        assert b1_done[rid].output == cont[rid]
+        assert len(cont[rid]) == want_len
+    assert eng.metrics.tokens_out == sum(clens)
+    assert b1.stats["tokens_out"] == sum(clens)
+
+
+def test_eos_anywhere_in_output_finishes_continuous_requests(tiny_lm):
+    """_finished now checks the whole stream, not just the last token —
+    the structural unification with truncate_at_eos.  (In-engine the two
+    were equivalent because _finished runs after every append; this pins
+    the shared rule so they can never drift.)"""
+    cfg, model, params = tiny_lm
+    eng, _ = _decoder_engines(tiny_lm, eos_id=3)
+
+    class _R:
+        max_new_tokens = 100
+        output = [5, 3, 9]
+    assert eng._finished(_R())                   # eos mid-stream finishes
+    _R.output = [5, 9]
+    assert not eng._finished(_R())
+
+
+# ----------------------------------------------------------- trace contract
+def test_sampled_trace_digest_seed_and_tamper_detection(tiny_lm):
+    """A traced sampled run audits clean (finish digests match the token
+    events; sampled submits carry seeds) and the audit actually has teeth:
+    perturbing one recorded token, or stripping a sampled submit's seed,
+    each raise a violation."""
+    cfg, model, params = tiny_lm
+    rec = TraceRecorder()
+    eng, fixed = _decoder_engines(tiny_lm, trace=rec)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+               for s in (12, 11, 13, 12)]
+    samplings = [_mix(i) for i in range(len(prompts))]
+    for p, s in zip(prompts, samplings):
+        eng.submit(p, sampling=s)
+    eng.run()
+
+    report = traceview.audit(
+        rec.events, metrics=eng.metrics,
+        metadata={"usable_blocks": eng.kv_cfg.num_blocks - 1})
+    assert report.ok, report.summary()
+    assert report.checks["sampled_requests"] == \
+        sum(1 for s in samplings if not s.greedy)
+    subs = [e for e in rec.events if e.name == "submit"]
+    assert sum("seed" in e.fields for e in subs) == \
+        report.checks["sampled_requests"]
+
+    # tamper 1: flip one decode_token's recorded value -> digest violation
+    evs = copy.deepcopy(rec.events)
+    tok = next(e for e in evs if e.name == "decode_token")
+    tok.fields["token"] = (tok.fields["token"] + 1) % cfg.vocab
+    bad = traceview.audit(evs)
+    assert any("digest" in v for v in bad.violations), bad.summary()
+
+    # tamper 2: strip a sampled submit's seed -> replayability violation
+    evs = copy.deepcopy(rec.events)
+    sub = next(e for e in evs
+               if e.name == "submit" and "seed" in e.fields)
+    del sub.fields["seed"]
+    bad = traceview.audit(evs)
+    assert any("seed" in v for v in bad.violations), bad.summary()

@@ -144,6 +144,8 @@ def test_bench_serving_csv_schema_pinned():
         "serve_continuous_tok_s",
         "serve_speedup_x",
         "serve_chunk_fill_frac",
+        "serve_sampled_tok_s",
+        "serve_sampled_mismatches",
         "serve_packing_packed_tok_s",
         "serve_packing_single_seg_tok_s",
         "serve_interference_chunked_decode_tbt_p95_s",
@@ -161,7 +163,9 @@ def test_bench_serving_csv_schema_pinned():
     ]
     # sections the smoke run skips drop their rows, never reorder the rest
     assert bs.expected_csv_names(pressure=False, lanes=False, ssm=False) == \
-        bs.expected_csv_names()[:8]
+        bs.expected_csv_names()[:10]
+    assert bs.expected_csv_names(sampled=False) == \
+        [n for n in bs.expected_csv_names() if "sampled" not in n]
     row = bs.csv_row("serve_fixed_tok_s", np.float64(12.5), "derived note")
     assert row == ("serve_fixed_tok_s", 12.5, "derived note")
     assert isinstance(row[1], float) and len(row) == len(bs.CSV_COLUMNS)
