@@ -54,6 +54,16 @@ compiled decode-only fast path skips the lane when there is no prompt
 work at all.  Reported per engine: useful tokens/s, TTFT p95, chunk fill
 fraction, packed segments and decode-only step counts.
 
+A sixth section (`--prefix`) is the PREFIX-SHARING sweep: a Poisson
+workload where most requests begin with one hot system prompt, replayed
+with prefix sharing on vs off under the same virtual clock.  Sharing-on
+admissions adopt the system prompt's KV blocks from the allocator's
+prefix index (refcounted, copy-on-write on divergence) and start prefill
+at the first unshared token, so the hot prefix is prefilled once, ever —
+reported as chunk tokens committed, prefix-hit tokens, CoW copies,
+tokens/s and TTFT p95 per setting (the streams themselves are pinned
+byte-identical by the test suite).
+
 A second section (`--lanes`) reports the PER-LANE breakdown of the plan's
 stage matmul dispatch: the same Poisson workload replayed through an
 xla-only plan, the tuned serve plan (`build_serve_plan` — each stage
@@ -368,6 +378,7 @@ def interference_workload(rng: np.random.Generator, n: int, vocab: int,
 
 def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
                     chunk_tokens, chunk_segments: int = None,
+                    prefix_sharing: bool = None,
                     c0: float = 0.25, c_tok: float = 0.125):
     """Replay the workload under a deterministic virtual clock: a step
     that carries prompt work costs c0 + c_tok x (decode rows + the chunk
@@ -391,6 +402,8 @@ def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
     sized = _dc.replace(rcfg, chunk_tokens=chunk_tokens)
     if chunk_segments is not None:
         sized = _dc.replace(sized, chunk_segments=chunk_segments)
+    if prefix_sharing is not None:
+        sized = _dc.replace(sized, prefix_sharing=prefix_sharing)
     eng = ContinuousEngine(model, params, mesh, DEFAULT_RULES, sized,
                            now_fn=lambda: clock["t"])
     by_rid = {}
@@ -435,6 +448,9 @@ def _replay_virtual(model, params, mesh, rcfg: RuntimeConfig, workload,
         "packed_segments": int(s["packed_segments"]),
         "decode_only_steps": int(s["decode_only_steps"]),
         "preemptions": int(s["preemptions"]),
+        "chunk_tokens_committed": int(s["chunk_tokens_committed"]),
+        "prefix_hit_tokens": int(s["prefix_hit_tokens"]),
+        "cow_copies": int(s["cow_copies"]),
         "done": len(done),
     }
 
@@ -572,13 +588,79 @@ def packing_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
     return results
 
 
+# --------------------------------------------------- prefix-sharing sweep
+def prefix_workload(rng: np.random.Generator, n: int, vocab: int,
+                    rate_hz: float, system_len: int = 32,
+                    share_frac: float = 0.75, tail_lo: int = 2,
+                    tail_hi: int = 16, new_lo: int = 4, new_hi: int = 12):
+    """Poisson arrivals where a `share_frac` share of requests begin with
+    ONE hot `system_len`-token system prompt (an exact multiple of the
+    headline block size, so its blocks are index-eligible) followed by a
+    short per-request tail; the rest carry unrelated prompts.  The shape
+    every multi-tenant chat serving deployment exhibits — and the one
+    prefix sharing exists for: the system prompt's KV should be prefilled
+    once, ever."""
+    system = rng.integers(0, vocab, size=system_len).astype(np.int32)
+    out = make_workload(rng, n, vocab, rate_hz, prompt_lo=4,
+                        prompt_hi=system_len // 2, new_lo=new_lo,
+                        new_hi=new_hi)
+    for w in out:
+        w["shared"] = bool(rng.random() < share_frac)
+        if w["shared"]:
+            tail = rng.integers(0, vocab,
+                                size=int(rng.integers(tail_lo, tail_hi + 1)))
+            w["prompt"] = np.concatenate([system, tail.astype(np.int32)])
+    return out
+
+
+def prefix_sweep(model, params, mesh, cfg, rcfg: RuntimeConfig,
+                 requests: int = 24, seed: int = 0, chunk_tokens: int = 32,
+                 rate_hz: float = 1.0, verbose: bool = True) -> dict:
+    """Useful tokens/s with vs without prefix sharing on a shared-system-
+    prompt Poisson workload (virtual clock — deterministic).  The sharing
+    engine admits each hot-prefix request with its system prompt's blocks
+    ADOPTED from the prefix index (refcounted, copy-on-write on divergence)
+    and starts prefill at the first unshared token, so the chunk lane
+    commits only the tails — fewer chunk-carrying steps, each a full
+    lane-width charge saved, which the cost model converts into tokens/s
+    and TTFT wins.  The sharing-off engine prefills every copy of the
+    system prompt from scratch.  Streams are byte-identical either way
+    (pinned by tests/test_prefix_sharing.py); this sweep measures the
+    work, not the answers."""
+    rng = np.random.default_rng(seed)
+    workload = prefix_workload(rng, requests, cfg.vocab, rate_hz)
+    results = {}
+    for label, share in (("on", True), ("off", False)):
+        r = _replay_virtual(model, params, mesh, rcfg, workload,
+                            chunk_tokens, prefix_sharing=share)
+        results[label] = r
+        if verbose:
+            print(f"sharing-{label:3s}: {r['tokens_per_s']:7.2f} tok/s | "
+                  f"ttft p95 {r['ttft_p95_s']:6.2f} | "
+                  f"chunk tokens {r['chunk_tokens_committed']:4d} "
+                  f"({r['chunk_steps']:3d} steps) | "
+                  f"prefix hits {r['prefix_hit_tokens']:4d} | "
+                  f"cow {r['cow_copies']:2d} | "
+                  f"{r['done']} reqs (virtual s)")
+    if verbose:
+        on, off = results["on"], results["off"]
+        ok = (on["prefix_hit_tokens"] > 0
+              and on["chunk_tokens_committed"]
+              <= 0.6 * off["chunk_tokens_committed"]
+              and on["tokens_per_s"] > off["tokens_per_s"])
+        print("prefix-sharing check (>=40% fewer chunk tokens, tokens/s "
+              f"improves, hits observed): {'PASS' if ok else 'MISS'}")
+    return results
+
+
 # -------------------------------------------------------------------- harness
 def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           rate_hz: float = 0.0, verbose: bool = True,
           lanes: bool = True, lane_requests: int = 12,
           pressure: bool = True, interference: bool = True,
           interference_requests: int = 24, packing: bool = True,
-          packing_requests: int = 24, sampling: str = "greedy",
+          packing_requests: int = 24, prefix: bool = True,
+          prefix_requests: int = 24, sampling: str = "greedy",
           sampled: bool = True, sampled_requests: int = 12,
           trace_path: str = None) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
@@ -691,6 +773,13 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
         out["packing"] = packing_sweep(model, params, mesh, cfg, rcfg,
                                        requests=packing_requests, seed=seed,
                                        verbose=verbose)
+    if prefix:
+        if verbose:
+            print("--- prefix-sharing sweep (hot shared system prompt; "
+                  "sharing on vs off; virtual clock) ---")
+        out["prefix"] = prefix_sweep(model, params, mesh, cfg, rcfg,
+                                     requests=prefix_requests, seed=seed,
+                                     verbose=verbose)
     if interference:
         if verbose:
             print("--- prefill-interference sweep (long/short Poisson mix; "
@@ -832,6 +921,7 @@ def bench_ssm(requests: int = 16, slots: int = 3, seed: int = 0,
 CSV_COLUMNS = ("name", "value", "derived")
 
 PACKING_LABELS = ("packed", "single-seg")
+PREFIX_LABELS = ("on", "off")
 INTERFERENCE_LABELS = ("chunked", "unchunked")
 PRESSURE_FACTORS = (1.0, 0.5, 0.25)
 LANE_LABELS = ("xla-only", "tuned plan", "forced pallas")
@@ -847,7 +937,7 @@ def csv_row(name: str, value, derived: str = "") -> tuple:
 
 
 def expected_csv_names(sampled: bool = True, packing: bool = True,
-                       interference: bool = True,
+                       prefix: bool = True, interference: bool = True,
                        pressure: bool = True, lanes: bool = True,
                        ssm: bool = True) -> list:
     """The exact, ordered row names run() appends — the pinned schema."""
@@ -858,6 +948,8 @@ def expected_csv_names(sampled: bool = True, packing: bool = True,
     if packing:
         names += [f"serve_packing_{l.replace('-', '_')}_tok_s"
                   for l in PACKING_LABELS]
+    if prefix:
+        names += [f"serve_prefix_{l}_tok_s" for l in PREFIX_LABELS]
     if interference:
         names += [f"serve_interference_{l}_decode_tbt_p95_s"
                   for l in INTERFERENCE_LABELS]
@@ -903,6 +995,13 @@ def run(csv_rows):
             f"fill={pr['chunk_fill_frac']:.2f} "
             f"packed_segments={pr['packed_segments']} "
             f"decode_only={pr['decode_only_steps']} virtual-clock"))
+    for label, xr in r.get("prefix", {}).items():
+        csv_rows.append(csv_row(
+            f"serve_prefix_{label}_tok_s", xr["tokens_per_s"],
+            f"ttft_p95={xr['ttft_p95_s']:.2f} "
+            f"chunk_tokens={xr['chunk_tokens_committed']} "
+            f"prefix_hits={xr['prefix_hit_tokens']} "
+            f"cow={xr['cow_copies']} virtual-clock"))
     for label, ir in r.get("interference", {}).items():
         csv_rows.append(csv_row(
             f"serve_interference_{label}_decode_tbt_p95_s",
@@ -965,6 +1064,14 @@ if __name__ == "__main__":
                     help="skip the segment-packing sweep")
     ap.add_argument("--packing-requests", type=int, default=24,
                     help="requests in the short-prompt packing mix")
+    ap.add_argument("--no-prefix", action="store_true",
+                    help="skip the prefix-sharing sweep")
+    ap.add_argument("--prefix-requests", type=int, default=24,
+                    help="requests in the shared-system-prompt mix")
+    ap.add_argument("--require-prefix-hits", action="store_true",
+                    help="exit non-zero unless the sharing-on replay "
+                         "adopted prompt tokens from the prefix index "
+                         "(CI guard)")
     ap.add_argument("--sampling", choices=("greedy", "mixed"),
                     default="greedy",
                     help="per-request sampling on the headline workload: "
@@ -1006,6 +1113,8 @@ if __name__ == "__main__":
                    interference_requests=args.interference_requests,
                    packing=not args.no_packing,
                    packing_requests=args.packing_requests,
+                   prefix=not args.no_prefix,
+                   prefix_requests=args.prefix_requests,
                    sampling=args.sampling, sampled=not args.no_sampled,
                    sampled_requests=args.sampled_requests,
                    trace_path=args.trace)
@@ -1017,6 +1126,15 @@ if __name__ == "__main__":
         print(f"sampled differential: FAIL — {sd['mismatches']} stream "
               f"mismatches, {sd['done']}/{sd['requests']} completed")
         raise SystemExit(1)
+    if args.require_prefix_hits:
+        px = result.get("prefix", {}).get("on", {})
+        hits = px.get("prefix_hit_tokens", 0)
+        if hits == 0:
+            print("prefix-sharing guard: FAIL — the sharing-on replay "
+                  "never adopted a prompt token from the prefix index")
+            raise SystemExit(1)
+        print(f"prefix-sharing guard: PASS ({hits} prefix-hit tokens, "
+              f"{px.get('cow_copies', 0)} CoW copies)")
     if args.require_decode_only:
         n = result["continuous"]["decode_only_steps"]
         if n == 0:

@@ -428,31 +428,59 @@ def jit_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
 def jit_commit_prefill(model, mesh: Mesh, rules: ShardingRules):
     """(k_pool, v_pool, ks, vs, block_ids) -> (k_pool, v_pool)
 
-    Scatter one request's per-layer K/V (L, 1, S_pad, Hkv, hd) into the
-    physical pool at `block_ids` (S_pad/block_size entries; padding entries
-    point at the null sink block).  Donates the pools.
+    Scatter up to S resuming requests' per-layer K/V
+    (L, S, S_pad, Hkv, hd) into the physical pool at `block_ids`
+    ((S, S_pad/block_size) entries; padding entries — short tables and
+    empty segment rows alike — point at the null sink block, whose payload
+    rows are zeros and which is never read).  Donates the pools.
 
     Since the unified step commits prefill KV in-program (chunk by chunk),
-    this is now only the *resume* path: a preempted request's swapped-out
-    KV, read back from the host buffer and scattered into its freshly
-    allocated blocks (`ContinuousEngine._resume`).  Resume always pads to
-    the full table width (max_blocks_per_seq blocks), so exactly one shape
-    ever traces — no bucket ladder anywhere in the serving runtime."""
+    this is now only the *resume* path: preempted requests' swapped-out
+    KV, read back from the host buffers and scattered into their freshly
+    allocated blocks (`ContinuousEngine._resume_group`).  Resume always
+    pads to S segments of the full table width (max_blocks_per_seq
+    blocks), so exactly one shape ever traces — no bucket ladder anywhere
+    in the serving runtime — and a burst of K swap-ins lands in
+    ceil(K / S) invocations instead of K."""
     rules = prune_for_mesh(rules, mesh)
     pool_shard = paged_pool_sharding(model, mesh, rules)
 
     def commit(k_pool, v_pool, ks, vs, block_ids):
-        n_layers, _, block_size = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
-        s_pad = ks.shape[2]
+        n_layers, block_size = k_pool.shape[0], k_pool.shape[2]
+        n_seg, s_pad = ks.shape[1], ks.shape[2]
         nb = s_pad // block_size
-        kb = ks[:, 0].reshape(n_layers, nb, block_size, *ks.shape[3:])
-        vb = vs[:, 0].reshape(n_layers, nb, block_size, *vs.shape[3:])
-        k_pool = k_pool.at[:, block_ids].set(kb.astype(k_pool.dtype))
-        v_pool = v_pool.at[:, block_ids].set(vb.astype(v_pool.dtype))
+        kb = ks.reshape(n_layers, n_seg * nb, block_size, *ks.shape[3:])
+        vb = vs.reshape(n_layers, n_seg * nb, block_size, *vs.shape[3:])
+        flat_ids = block_ids.reshape(-1)
+        k_pool = k_pool.at[:, flat_ids].set(kb.astype(k_pool.dtype))
+        v_pool = v_pool.at[:, flat_ids].set(vb.astype(v_pool.dtype))
         return k_pool, v_pool
 
     return jax.jit(commit, in_shardings=(pool_shard, pool_shard, None, None,
                                          None),
+                   out_shardings=(pool_shard, pool_shard),
+                   donate_argnums=(0, 1))
+
+
+def jit_cow_block(model, mesh: Mesh, rules: ShardingRules):
+    """(k_pool, v_pool, src, dst) -> (k_pool, v_pool)
+
+    Device side of copy-on-write: duplicate physical block `src` into
+    `dst` in both pools.  The host allocator has already repointed the
+    writing request's block table at `dst`; co-owners keep reading `src`.
+    Block ids are traced scalars, so every CoW shares ONE executable —
+    lazily compiled at the first copy, never on admission.  Donates the
+    pools (they ping-pong exactly like the step programs')."""
+    rules = prune_for_mesh(rules, mesh)
+    pool_shard = paged_pool_sharding(model, mesh, rules)
+
+    def copy(k_pool, v_pool, src, dst):
+        k_pool = k_pool.at[:, dst].set(k_pool[:, src])
+        v_pool = v_pool.at[:, dst].set(v_pool[:, src])
+        return k_pool, v_pool
+
+    return jax.jit(copy,
+                   in_shardings=(pool_shard, pool_shard, None, None),
                    out_shardings=(pool_shard, pool_shard),
                    donate_argnums=(0, 1))
 
@@ -571,19 +599,22 @@ def jit_ssm_decode_only_step(model, mesh: Mesh, rules: ShardingRules,
 
 
 def jit_ssm_commit_state(model, mesh: Mesh, rules: ShardingRules):
-    """(conv_pool, ssm_pool, conv, ssm, row) -> (conv_pool, ssm_pool)
+    """(conv_pool, ssm_pool, conv, ssm, rows) -> (conv_pool, ssm_pool)
 
-    Scatter one request's per-layer state (conv (L, W-1, conv_dim), ssm
-    (L, nh, hd, n)) into pool row `row` — the ssm resume path: a preempted
-    request's swapped-out state read back from the host buffer into its
-    freshly claimed row.  `row` is traced data, so exactly one shape ever
-    traces.  Donates the pools."""
+    Scatter up to S resuming requests' per-layer state (conv
+    (L, S, W-1, conv_dim), ssm (L, S, nh, hd, n)) into pool rows `rows`
+    ((S,) entries; padding entries point at the null row 0 with zero
+    payloads — zeros over zeros, never read) — the ssm resume path:
+    preempted requests' swapped-out state read back from the host buffers
+    into their freshly claimed rows.  `rows` is traced data, so exactly
+    one shape ever traces, and a burst of K swap-ins lands in ceil(K / S)
+    invocations.  Donates the pools."""
     rules = prune_for_mesh(rules, mesh)
     conv_shard, ssm_shard = slot_state_shardings(model, mesh, rules)
 
-    def commit(conv_pool, ssm_pool, conv, ssm, row):
-        conv_pool = conv_pool.at[:, row].set(conv.astype(conv_pool.dtype))
-        ssm_pool = ssm_pool.at[:, row].set(ssm.astype(ssm_pool.dtype))
+    def commit(conv_pool, ssm_pool, conv, ssm, rows):
+        conv_pool = conv_pool.at[:, rows].set(conv.astype(conv_pool.dtype))
+        ssm_pool = ssm_pool.at[:, rows].set(ssm.astype(ssm_pool.dtype))
         return conv_pool, ssm_pool
 
     return jax.jit(commit,

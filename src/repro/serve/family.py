@@ -28,14 +28,22 @@ The adapter protocol (duck-typed; both classes implement it):
     family              str tag stamped on metrics and trace events
     chunk_width         the prefill lane's resolved token width
     chunk_segments      segments one chunk may pack (ssm: always 1)
+    resume_segments     swap-ins one commit invocation may pack
     cache               the family's device-state container (swap buffers)
     alloc               its allocator (trace binding, occupancy, invariants)
     capacity()          the scheduler's capacity-seam object
     victim_eligible     predicate narrowing preemption victims (or None)
     grow_for_decode(req, need_rows) -> bool   cover the next decode write
-    claim_chunk(req) -> bool                  cover a prompt chunk dispatch
+    claim_chunk(req, start, n) -> bool        cover a prompt chunk dispatch
+                        (decoder: copy-on-write any shared block the
+                        chunk's rows [start, start+n) would land in)
+    register_prefix(req)                      index req's committed
+                        full-block prompt prefixes for later sharing
+                        (ssm: no-op — state rows are not shareable)
     swap_out(rid) -> nbytes                   device state -> host buffer
-    resume_commit(req) -> nbytes              host buffer -> device state
+    resume_commit(group) -> [nbytes, ...]     host buffers -> device state:
+                        ONE commit invocation for up to resume_segments
+                        re-admitted requests
     dispatch(params, dec_rids, lengths, last_tok, chunks,
              dec_sampling, dec_keys)
                         -> (next_tokens (slots,), seg_next | None)
@@ -62,6 +70,7 @@ import numpy as np
 from repro.distributed.sharding import ShardingRules, prune_for_mesh
 from repro.launch.steps import (
     jit_commit_prefill,
+    jit_cow_block,
     jit_decode_only_step,
     jit_ssm_commit_state,
     jit_ssm_decode_only_step,
@@ -140,8 +149,14 @@ class DecoderFamilyAdapter:
             decode_attn_backend=decode_backend,
             decode_matmul_table=router.matmul_table("decode"),
             interpret=cfg.interpret)
-        # resume-only commit (swap-in scatter); single full-width shape
+        # resume-only commit (swap-in scatter): single full-width shape
+        # carrying up to `resume_segments` requests per invocation, padded
+        # segments diverted to the null sink
+        self.resume_segments = self.chunk_segments
         self._commit = jit_commit_prefill(model, mesh, rules)
+        # copy-on-write block duplication (prefix sharing); jit is lazy, so
+        # this compiles at the FIRST shared-block write, never on admission
+        self._cow = jit_cow_block(model, mesh, rules)
         # commit the fresh pools to their serving sharding up front: the
         # unified program's donated pool arguments then carry the SAME
         # sharding on the very first step as on every later one, so exactly
@@ -163,14 +178,49 @@ class DecoderFamilyAdapter:
     # every resident holds blocks from admission: any victim frees capacity
     victim_eligible = None
 
+    def _cow_rows(self, req: ServeRequest, lo_row: int, hi_row: int) -> bool:
+        """Copy-on-write every shared block whose rows intersect
+        [lo_row, hi_row) before a write lands there: the allocator swaps a
+        fresh private block into req's table and the jitted copy program
+        duplicates the payload — co-owners keep reading the original.
+        False when the pool runs dry mid-way (the engine preempts a victim
+        and retries; copies already made stay consistent)."""
+        if not self.kv_cfg.prefix_sharing or hi_row <= lo_row:
+            return True
+        bs = self.kv_cfg.block_size
+        for bi in range(lo_row // bs, (hi_row - 1) // bs + 1):
+            try:
+                copied = self.cache.alloc.cow(req.rid, bi)
+            except MemoryError:
+                return False
+            if copied is not None:
+                src, dst = copied
+                self.cache.k, self.cache.v = self._cow(
+                    self.cache.k, self.cache.v, np.int32(src), np.int32(dst))
+        return True
+
     def grow_for_decode(self, req: ServeRequest, need_rows: int) -> bool:
         """Extend req's block table to cover its next decode write; False
-        when the pool is dry (the engine preempts a victim and retries)."""
-        return self.cache.alloc.extend(req.rid, need_rows)
+        when the pool is dry (the engine preempts a victim and retries).
+        The decode write lands at row need_rows - 1 — privatize that block
+        first if it is shared (full-prompt prefix adoption can leave the
+        last prompt block shared into decode)."""
+        if not self.cache.alloc.extend(req.rid, need_rows):
+            return False
+        return self._cow_rows(req, need_rows - 1, need_rows)
 
-    def claim_chunk(self, req: ServeRequest) -> bool:
-        # admission already allocated the prompt's blocks — nothing lazy
-        return True
+    def claim_chunk(self, req: ServeRequest, start: int, n: int) -> bool:
+        """Admission already allocated the prompt's blocks; the only lazy
+        work is copy-on-write when the chunk's KV rows [start, start+n)
+        would land in a block adopted from the prefix index."""
+        return self._cow_rows(req, start, start + n)
+
+    def register_prefix(self, req: ServeRequest) -> None:
+        """Index req's committed full-block prompt prefixes so later
+        admissions can adopt them (first registration wins)."""
+        if self.kv_cfg.prefix_sharing:
+            self.cache.alloc.register_prefix(
+                req.rid, req.prompt, min(req.prefilled, req.prompt_len))
 
     # ------------------------------------------------------------- swapping
     def is_swapped(self, rid: int) -> bool:
@@ -179,30 +229,35 @@ class DecoderFamilyAdapter:
     def swap_out(self, rid: int) -> int:
         return self.cache.swap_out(rid)
 
-    def resume_commit(self, req: ServeRequest) -> int:
-        """Swap a re-admitted request's KV back in: scatter the host buffer
-        into the freshly allocated blocks via the jitted commit program,
-        always padded to the FULL table width (padding ids point at the
-        null sink) so exactly one commit shape ever traces."""
-        k_host, v_host = self.cache.take_swapped(req.rid)
-        nbytes = k_host.nbytes + v_host.nbytes   # before table padding
-        table = self.cache.alloc.tables[req.rid]
-        nb = k_host.shape[1]
-        assert nb == len(table)
+    def resume_commit(self, group: List[ServeRequest]) -> List[int]:
+        """Swap up to `resume_segments` re-admitted requests' KV back in
+        with ONE commit invocation: each host buffer scatters into its
+        freshly allocated blocks, every segment padded to the FULL table
+        width and the group padded to the full segment count (padding ids
+        point at the null sink with zero payloads) so exactly one commit
+        shape ever traces.  Returns the bytes moved per request."""
+        assert 0 < len(group) <= self.resume_segments
         bs = self.kv_cfg.block_size
         nb_pad = self.kv_cfg.max_blocks_per_seq
-        ids = np.full((nb_pad,), NULL_BLOCK, np.int32)
-        ids[:nb] = table
-        if nb_pad > nb:
-            pad = np.zeros(k_host.shape[:1] + (nb_pad - nb,)
-                           + k_host.shape[2:], k_host.dtype)
-            k_host = np.concatenate([k_host, pad], axis=1)
-            v_host = np.concatenate([v_host, pad], axis=1)
-        L = k_host.shape[0]
-        ks = jnp.asarray(k_host.reshape(L, 1, nb_pad * bs, *k_host.shape[3:]))
-        vs = jnp.asarray(v_host.reshape(L, 1, nb_pad * bs, *v_host.shape[3:]))
+        n_seg = self.resume_segments
+        hosts = [self.cache.take_swapped(r.rid) for r in group]
+        k0 = hosts[0][0]
+        L = k0.shape[0]
+        ks = np.zeros((L, n_seg, nb_pad * bs, *k0.shape[3:]), k0.dtype)
+        vs = np.zeros_like(ks)
+        ids = np.full((n_seg, nb_pad), NULL_BLOCK, np.int32)
+        nbytes: List[int] = []
+        for i, (req, (k_host, v_host)) in enumerate(zip(group, hosts)):
+            nbytes.append(k_host.nbytes + v_host.nbytes)
+            table = self.cache.alloc.tables[req.rid]
+            nb = k_host.shape[1]
+            assert nb == len(table)
+            ks[:, i, :nb * bs] = k_host.reshape(L, nb * bs, *k_host.shape[3:])
+            vs[:, i, :nb * bs] = v_host.reshape(L, nb * bs, *v_host.shape[3:])
+            ids[i, :nb] = table
         self.cache.k, self.cache.v = self._commit(
-            self.cache.k, self.cache.v, ks, vs, jnp.asarray(ids))
+            self.cache.k, self.cache.v, jnp.asarray(ks), jnp.asarray(vs),
+            jnp.asarray(ids))
         return nbytes
 
     # ------------------------------------------------------------- dispatch
@@ -282,6 +337,10 @@ class SSMFamilyAdapter:
         q = max(1, mcfg.ssm_chunk)
         self.chunk_width = -(-cfg.chunk_width // q) * q
         self.chunk_segments = 1
+        # resume packing is independent of chunk packing: state rows are
+        # disjoint scatter targets, so one commit can carry many swap-ins
+        # even though the SSD recurrence holds the chunk lane at width 1
+        self.resume_segments = max(1, cfg.chunk_segments)
         self.state_cfg = cfg.state_config()
         self.cache = SlotStateCache.for_model(self.state_cfg, mcfg)
         chunk_stage, decode_stage = "ssm_prefill_chunk", "ssm_decode"
@@ -320,15 +379,22 @@ class SSMFamilyAdapter:
         # fixed-size state: nothing grows during decode
         return True
 
-    def claim_chunk(self, req: ServeRequest) -> bool:
+    def claim_chunk(self, req: ServeRequest, start: int, n: int) -> bool:
         """Lazily claim req's state row at first-chunk dispatch; False when
-        the pool is dry (the engine preempts a row holder and retries)."""
+        the pool is dry (the engine preempts a row holder and retries).
+        The chunk geometry is irrelevant: state rows are fixed-size and
+        never shared, so there is nothing to copy-on-write."""
         if self.cache.alloc.holds(req.rid):
             return True
         if not self.cache.alloc.can_allocate(1):
             return False
         self.cache.alloc.allocate(req.rid)
         return True
+
+    def register_prefix(self, req: ServeRequest) -> None:
+        # recurrent state is a lossy summary of the whole prefix — rows are
+        # owned by exactly one request, so there is no prefix index to feed
+        return None
 
     # ------------------------------------------------------------- swapping
     def is_swapped(self, rid: int) -> bool:
@@ -337,16 +403,29 @@ class SSMFamilyAdapter:
     def swap_out(self, rid: int) -> int:
         return self.cache.swap_out(rid)
 
-    def resume_commit(self, req: ServeRequest) -> int:
-        """Scatter a re-admitted request's host-side (conv, ssm) state into
-        its freshly claimed pool row via the jitted commit program.  The
-        row index is traced data — one shape ever traces."""
-        conv_host, ssm_host = self.cache.take_swapped(req.rid)
-        nbytes = conv_host.nbytes + ssm_host.nbytes
-        row = self.cache.alloc.slot_of(req.rid)
+    def resume_commit(self, group: List[ServeRequest]) -> List[int]:
+        """Scatter up to `resume_segments` re-admitted requests' host-side
+        (conv, ssm) states into their freshly claimed pool rows with ONE
+        commit invocation.  The row array is traced data, padded entries
+        point at the null row with zero payloads — one shape ever traces.
+        Returns the bytes moved per request."""
+        assert 0 < len(group) <= self.resume_segments
+        n_seg = self.resume_segments
+        hosts = [self.cache.take_swapped(r.rid) for r in group]
+        conv0, ssm0 = hosts[0]
+        conv = np.zeros((conv0.shape[0], n_seg, *conv0.shape[1:]),
+                        conv0.dtype)
+        ssm = np.zeros((ssm0.shape[0], n_seg, *ssm0.shape[1:]), ssm0.dtype)
+        rows = np.zeros((n_seg,), np.int32)   # padding -> null row sink
+        nbytes: List[int] = []
+        for i, (req, (conv_host, ssm_host)) in enumerate(zip(group, hosts)):
+            nbytes.append(conv_host.nbytes + ssm_host.nbytes)
+            conv[:, i] = conv_host
+            ssm[:, i] = ssm_host
+            rows[i] = self.cache.alloc.slot_of(req.rid)
         self.cache.conv, self.cache.ssm = self._commit(
-            self.cache.conv, self.cache.ssm, jnp.asarray(conv_host),
-            jnp.asarray(ssm_host), np.int32(row))
+            self.cache.conv, self.cache.ssm, jnp.asarray(conv),
+            jnp.asarray(ssm), jnp.asarray(rows))
         return nbytes
 
     # ------------------------------------------------------------- dispatch

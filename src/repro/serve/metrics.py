@@ -83,6 +83,17 @@ class ServeMetrics:
     swap_out_bytes: int = 0
     swap_in_bytes: int = 0
     stall_s: float = 0.0       # total off-slot time of preempted requests
+    # prefix sharing: prompt tokens whose KV admission adopted from the
+    # prefix index (chunk-lane work never done) and copy-on-write block
+    # copies made when a write landed in a shared block
+    prefix_hit_tokens: int = 0
+    cow_copies: int = 0
+    # packed resume commits: `resume_commits` counts commit-program
+    # invocations (a burst of K swap-ins costs ceil(K / resume_segments)),
+    # `packed_resumes` the swap-ins that shared their invocation with at
+    # least one other (the resume-path mirror of `packed_segments`)
+    resume_commits: int = 0
+    packed_resumes: int = 0
 
     # ----------------------------------------------------------- recording
     def record_step(self, active_slots: int, max_slots: int,
@@ -141,6 +152,20 @@ class ServeMetrics:
         self.stall_s += stall_s
         self.swap_in_time_s += swap_in_s
 
+    def record_resume_commit(self, n_requests: int) -> None:
+        """One commit-program invocation carried `n_requests` swap-ins."""
+        self.resume_commits += 1
+        if n_requests > 1:
+            self.packed_resumes += n_requests
+
+    def record_prefix_hit(self, n_tokens: int) -> None:
+        """Admission adopted `n_tokens` prompt tokens' KV from the prefix
+        index — chunk-lane work that will never run."""
+        self.prefix_hit_tokens += n_tokens
+
+    def record_cow(self, n_copies: int) -> None:
+        self.cow_copies += n_copies
+
     # ------------------------------------------------------------- summary
     @property
     def wall_s(self) -> float:
@@ -185,4 +210,8 @@ class ServeMetrics:
             "swap_out_bytes": float(self.swap_out_bytes),
             "swap_in_bytes": float(self.swap_in_bytes),
             "stall_s": self.stall_s,
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
+            "cow_copies": float(self.cow_copies),
+            "resume_commits": float(self.resume_commits),
+            "packed_resumes": float(self.packed_resumes),
         }

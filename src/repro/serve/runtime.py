@@ -158,6 +158,12 @@ class RuntimeConfig:
     # ordinary grow-or-preempt path at first-chunk claim time.  Ignored by
     # the paged family.
     state_slots: Optional[int] = None
+    # prefix sharing (paged family only): admission may map a prompt's
+    # full-block prefixes onto blocks other requests already committed
+    # (refcounted, copy-on-write) and start prefill at the first unshared
+    # token.  Off by default — token streams are byte-identical either
+    # way; the differential suite toggles it explicitly.
+    prefix_sharing: bool = False
     interpret: bool = True            # False: compile Pallas lanes on real TPU
 
     @property
@@ -177,7 +183,8 @@ class RuntimeConfig:
         if nb is None:
             nb = self.max_slots * self.max_blocks_per_seq + 1
         return KVCacheConfig(num_blocks=nb, block_size=self.block_size,
-                             max_blocks_per_seq=self.max_blocks_per_seq)
+                             max_blocks_per_seq=self.max_blocks_per_seq,
+                             prefix_sharing=self.prefix_sharing)
 
     def state_config(self) -> StateCacheConfig:
         ns = self.state_slots
@@ -191,7 +198,7 @@ class ContinuousEngine:
 
     # family-owned attributes tests and tools read off the engine; resolved
     # through the adapter so the seam stays invisible to existing callers
-    _ADAPTER_ATTRS = ("_unified", "_decode_only", "_commit", "cache",
+    _ADAPTER_ATTRS = ("_unified", "_decode_only", "_commit", "_cow", "cache",
                       "kv_cfg")
 
     def __init__(self, model, params, mesh, rules: ShardingRules,
@@ -297,12 +304,13 @@ class ContinuousEngine:
                     "no victims left — submit() guard violated")
             self._preempt(victim)
 
-    def _claim_chunk(self, req: ServeRequest) -> bool:
+    def _claim_chunk(self, req: ServeRequest, start: int, n: int) -> bool:
         """Cover a prompt chunk's dispatch footprint (the ssm family claims
-        its state row lazily here), preempting capacity holders while the
-        pool is dry.  False only when no eligible victim remains — the
-        chunk then waits for a later step."""
-        while not self.adapter.claim_chunk(req):
+        its state row lazily here; the paged family copy-on-writes any
+        shared block the chunk's rows would land in), preempting capacity
+        holders while the pool is dry.  False only when no eligible victim
+        remains — the chunk then waits for a later step."""
+        while not self.adapter.claim_chunk(req, start, n):
             victim = self.scheduler.victim_for_preemption(
                 exclude_rid=req.rid, eligible=self.adapter.victim_eligible)
             if victim is None:
@@ -321,34 +329,47 @@ class ContinuousEngine:
         self._reset_slot(slot)
         self.metrics.record_preemption(nbytes)
 
-    def _resume(self, req: ServeRequest) -> None:
-        """Swap a re-admitted request's state back in through the family's
-        jitted commit program (one fixed shape — see the adapters'
-        `resume_commit`), then restore the slot's host state.  No forward
+    def _resume_all(self, reqs: List[ServeRequest]) -> None:
+        """Swap re-admitted requests back in, segment-packed: up to
+        `resume_segments` requests share ONE commit invocation, so a burst
+        of K swap-ins costs ceil(K / resume_segments) program dispatches
+        instead of K — the resume-path counterpart of chunk packing."""
+        width = self.adapter.resume_segments
+        for i in range(0, len(reqs), width):
+            self._resume_group(reqs[i:i + width])
+
+    def _resume_group(self, group: List[ServeRequest]) -> None:
+        """One packed commit: scatter the group's host-side state back into
+        their freshly claimed capacity (one fixed shape — see the adapters'
+        `resume_commit`), then restore each slot's host state.  No forward
         pass — no token is recomputed; a mid-prefill request continues
-        chunking from `prefilled`."""
+        chunking from `prefilled`.  The batch's wall time is split evenly
+        across the group for per-request swap-in accounting."""
         t0 = time.perf_counter()
         if self.trace.enabled:
             n_commit = self._commit._cache_size()
-        nbytes = self.adapter.resume_commit(req)
-        swap_in_s = time.perf_counter() - t0
-        if self.trace.enabled:
-            if self._commit._cache_size() > n_commit:
-                self.trace.emit("compile", program="commit",
-                                device_s=swap_in_s)
-            self.trace.emit("swap_in", rid=req.rid, nbytes=nbytes)
-            self.trace.emit("resume", rid=req.rid, stall_s=req.last_stall_s,
-                            swap_in_s=swap_in_s)
-        self.metrics.record_resume(nbytes, req.last_stall_s,
-                                   swap_in_s=swap_in_s)
-        slot = req.slot
-        if req.prefilling:
-            # not in the decode batch yet: stay masked (zeroed) until the
-            # remaining chunks commit the rest of the prompt
-            self._reset_slot(slot)
-        else:
-            self._lengths[slot] = req.prompt_len + len(req.output) - 1
-            self._last_tok[slot] = req.output[-1]
+        nbytes = self.adapter.resume_commit(group)
+        batch_s = time.perf_counter() - t0
+        swap_in_s = batch_s / len(group)
+        self.metrics.record_resume_commit(len(group))
+        if self.trace.enabled and self._commit._cache_size() > n_commit:
+            self.trace.emit("compile", program="commit", device_s=batch_s)
+        for req, nb in zip(group, nbytes):
+            if self.trace.enabled:
+                self.trace.emit("swap_in", rid=req.rid, nbytes=nb)
+                self.trace.emit("resume", rid=req.rid,
+                                stall_s=req.last_stall_s,
+                                swap_in_s=swap_in_s)
+            self.metrics.record_resume(nb, req.last_stall_s,
+                                       swap_in_s=swap_in_s)
+            slot = req.slot
+            if req.prefilling:
+                # not in the decode batch yet: stay masked (zeroed) until
+                # the remaining chunks commit the rest of the prompt
+                self._reset_slot(slot)
+            else:
+                self._lengths[slot] = req.prompt_len + len(req.output) - 1
+                self._last_tok[slot] = req.output[-1]
 
     def _reset_slot(self, slot: int) -> None:
         # stale lengths on a freed slot would index past the (all-null)
@@ -394,11 +415,19 @@ class ContinuousEngine:
         entirely.  Returns False when nothing ran."""
         now = self.now_fn()
         admitted = self.scheduler.admit(now)
-        for req in admitted:
-            if self.adapter.is_swapped(req.rid):
-                self._resume(req)
-            # fresh admissions run nothing here: their prompts stream
-            # through the unified step's chunk lane, starting this step
+        resuming = [r for r in admitted if self.adapter.is_swapped(r.rid)]
+        if self.cfg.prefix_sharing:
+            # fresh admissions run nothing; a non-zero `prefilled` on one
+            # means admission adopted that many prompt tokens' KV from the
+            # prefix index — work the chunk lane will never do
+            rs = {r.rid for r in resuming}
+            for req in admitted:
+                if req.rid not in rs and req.prefilled > 0:
+                    self.metrics.record_prefix_hit(req.prefilled)
+        if resuming:
+            self._resume_all(resuming)
+        # fresh admissions run nothing here: their prompts stream
+        # through the unified step's chunk lane, starting this step
 
         chunks = self.scheduler.next_chunks(self._chunk_width,
                                             self._chunk_segments)
@@ -414,9 +443,10 @@ class ContinuousEngine:
                 self._ensure_blocks(req)
         # chunk-claim: each packed segment's request must hold its family
         # footprint before dispatch (ssm: lazy state-row claim; paged:
-        # no-op — the prompt's blocks were allocated at admission)
+        # copy-on-write any shared block under the chunk's rows — the
+        # prompt's blocks themselves were allocated at admission)
         chunks = [ch for ch in chunks
-                  if ch[0].slot is not None and self._claim_chunk(ch[0])]
+                  if ch[0].slot is not None and self._claim_chunk(*ch)]
         chunks = [ch for ch in chunks if ch[0].slot is not None]
 
         decoding = [r for r in self.scheduler.slots
@@ -478,6 +508,9 @@ class ContinuousEngine:
                                            self._chunk_width)
             for i, (req, start, n) in enumerate(chunks):
                 req.prefilled = start + n
+                # the chunk's KV is committed and final: index the prompt's
+                # covered full-block prefixes for later admissions to adopt
+                self.adapter.register_prefix(req)
                 if trace.enabled:
                     trace.emit("chunk_committed", t=now, rid=req.rid,
                                start=start, n=n, prefilled=req.prefilled)
@@ -510,4 +543,11 @@ class ContinuousEngine:
                                token=int(nxt[slot]))
                 if self._finished(req):
                     self._retire(req, now)
+        # copy-on-write copies performed while growing/claiming this step
+        # (the allocator counts them; state-row allocators have none)
+        drain = getattr(self.adapter.alloc, "drain_cow_copies", None)
+        if drain is not None:
+            copied = drain()
+            if copied:
+                self.metrics.record_cow(copied)
         return True

@@ -146,11 +146,43 @@ class PagedCapacity:
             return f"needs {need} KV blocks but the pool only has {usable}"
         return None
 
+    def _prefix_plan(self, req: "ServeRequest"):
+        """(matched blocks, revived count, fresh blocks) for admitting req
+        with prefix sharing: `matched` comes from the allocator's prefix
+        index, `revived` counts the matched blocks currently parked on the
+        free list (refcount 0 — adopting them shrinks the free pool), and
+        `fresh` is what the prompt still needs beyond the match."""
+        if not getattr(self.kv_cfg, "prefix_sharing", False):
+            return [], 0, self.kv_cfg.blocks_for(req.prompt_len)
+        matched = self.alloc.match_prefix(req.prompt)
+        revived = sum(1 for b in matched if b not in self.alloc.refcount)
+        fresh = self.kv_cfg.blocks_for(req.prompt_len) - len(matched)
+        return matched, revived, fresh
+
     def can_admit_fresh(self, req: "ServeRequest") -> bool:
-        return self.alloc.can_allocate(self.kv_cfg.blocks_for(req.prompt_len))
+        # live matched blocks are free capacity-wise (refcount bump only);
+        # revived ones leave the free list, so they count like fresh blocks
+        _, revived, fresh = self._prefix_plan(req)
+        return self.alloc.can_allocate(fresh + revived)
 
     def admit_fresh(self, req: "ServeRequest") -> None:
-        self.alloc.allocate(req.rid, self.kv_cfg.blocks_for(req.prompt_len))
+        matched, _, fresh = self._prefix_plan(req)
+        if not matched:
+            self.alloc.allocate(req.rid,
+                                self.kv_cfg.blocks_for(req.prompt_len))
+            return
+        # adopt the shared prefix FIRST (reviving any free-listed matches),
+        # THEN grow the fresh tail — allocation must not evict a block the
+        # match is about to revive
+        self.alloc.share(req.rid, matched)
+        if fresh:
+            ok = self.alloc.extend(req.rid, req.prompt_len)
+            assert ok, "admission gate passed but the fresh tail failed"
+        # prefill starts at the first unshared token; at least one prompt
+        # token always runs through the chunk lane so the first output
+        # token is sampled from the segment's logits exactly as unshared
+        req.prefilled = min(len(matched) * self.kv_cfg.block_size,
+                            req.prompt_len - 1)
 
     def can_admit_resume(self, req: "ServeRequest") -> bool:
         return self.alloc.can_allocate(self.alloc.swapped[req.rid])

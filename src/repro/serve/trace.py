@@ -14,7 +14,8 @@ Three pieces:
     (`submit` / `reject` / `admit` / `chunk_scheduled` / `chunk_committed` /
     `first_token` / `decode_token` / `finish`), preemption
     (`preempt` / `swap_out` / `swap_in` / `resume`), pool accounting
-    (`block_alloc` / `block_extend` / `block_free`), and per-step dispatch
+    (`block_alloc` / `block_extend` / `block_free` / `block_share` /
+    `cow_copy`), and per-step dispatch
     (`step_begin` / `step_end` with step kind, lane width, segment count,
     fill and device time, plus `compile` when a step program traces).
     Unknown event names are rejected loudly — the audit layer
@@ -61,10 +62,17 @@ EVENT_TYPES = frozenset({
     "swap_out",        # rid, nbytes, n_blocks
     "swap_in",         # rid, nbytes
     "resume",          # rid, stall_s, swap_in_s
-    # pool accounting (kvcache.py BlockAllocator)
+    # pool accounting (kvcache.py BlockAllocator).  `free_after` on every
+    # event lets the audit replay pool conservation step by step; under
+    # refcounting a free only `released` the blocks whose last owner let
+    # go (absent on pre-sharing traces — then released == n).
     "block_alloc",     # rid, n, free_after
     "block_extend",    # rid, n, free_after
-    "block_free",      # rid, n, free_after
+    "block_free",      # rid, n, released, free_after
+    "block_share",     # rid, n, revived, free_after  (prefix adoption:
+                       #   only the `revived` blocks left the free list)
+    "cow_copy",        # rid, n, free_after  (copy-on-write: n fresh blocks
+                       #   claimed; the old blocks keep their other owners)
     # step dispatch (runtime.py)
     "step_begin",      # step, kind ("unified"|"decode_only"), lane_width,
                        #   segments, chunk_tokens, decode_rows
@@ -271,7 +279,8 @@ def _pool_track_events(events: List[TraceEvent], t0: float) -> List[dict]:
     """Free-block counter track from the allocator's accounting events."""
     out: List[dict] = []
     for e in events:
-        if e.name in ("block_alloc", "block_extend", "block_free"):
+        if e.name in ("block_alloc", "block_extend", "block_free",
+                      "block_share", "cow_copy"):
             out.append({"name": "free_blocks", "ph": "C",
                         "pid": PID_POOL, "tid": 0, "ts": _us(e.t, t0),
                         "args": {"free": e.fields.get("free_after", 0)}})

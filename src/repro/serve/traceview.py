@@ -23,10 +23,17 @@ recomputable from the event stream alone.  Checks:
     trace records the EXACT stream a replay must reproduce; and every
     sampled submit (temperature > 0) carries its `seed`, without which a
     recorded run is not replayable;
-  * **pool** — replaying `block_alloc` / `block_extend` / `block_free`
-    against a free-block counter reproduces every event's recorded
-    `free_after`, no request's holding goes negative, and a completed run
-    returns the pool to its initial free level;
+  * **pool** — replaying `block_alloc` / `block_extend` / `block_free` /
+    `block_share` / `cow_copy` against a free-block counter reproduces
+    every event's recorded `free_after`, no request's holding goes
+    negative, and a completed run returns the pool to its initial free
+    level.  The replay is REFCOUNT-aware: a share only removes its
+    `revived` blocks from the free level (live matches just gain an
+    owner), a free only returns its `released` blocks (co-owned blocks
+    stay out), and a CoW claims one fresh block without releasing the old
+    (its other owners keep it) — so a forged share (claiming more free
+    blocks than it revived, or reviving blocks that were never free)
+    breaks the `free_after` chain and fails the audit;
   * **dispatch** — `step_end` events with kind `decode_only` carried zero
     segments and zero chunk tokens, and their count matches
     `decode_only_steps` (same for `chunk_steps` / unified);
@@ -84,6 +91,7 @@ class Lifecycle:
     digest: Optional[str] = None
     sampled: bool = False
     has_seed: bool = False
+    shared_blocks: int = 0   # prefix blocks adopted via block_share events
 
     # ------------------------------------------------- event-derived timing
     @property
@@ -174,6 +182,8 @@ def build_lifecycles(events: List[TraceEvent]) -> Dict[int, Lifecycle]:
         elif e.name == "chunk_committed":
             lc(r).chunks.append((e.t, e.fields.get("start", 0),
                                  e.fields.get("n", 0)))
+        elif e.name == "block_share":
+            lc(r).shared_blocks += e.fields.get("n", 0)
         elif e.name == "finish":
             x = lc(r)
             x.finish_t = e.t
@@ -219,8 +229,8 @@ def _match_samples(name: str, got: List[float], want: List[float],
             return
 
 
-def _audit_lifecycles(lcs: Dict[int, Lifecycle],
-                      violations: List[str]) -> None:
+def _audit_lifecycles(lcs: Dict[int, Lifecycle], violations: List[str],
+                      block_size: Optional[int] = None) -> None:
     for rid, x in sorted(lcs.items()):
         if x.submit_t is None:
             violations.append(f"req {rid}: events without a submit")
@@ -261,9 +271,22 @@ def _audit_lifecycles(lcs: Dict[int, Lifecycle],
         if resumes != len(x.preempts):
             violations.append(f"req {rid}: {len(x.preempts)} preempts but "
                               f"{resumes} resume admits")
-        # chunk coverage: committed segments tile [0, prompt_len) in order
+        # chunk coverage: committed segments tile [adopted, prompt_len) in
+        # order, where `adopted` is 0 unless the request shared prefix
+        # blocks at admission (then its first chunk begins at the adoption
+        # point — min(shared_blocks * block_size, prompt_len - 1) when the
+        # trace metadata pins the block size, else wherever the first chunk
+        # says, as long as a share justifies the skip)
         if x.chunks and x.prompt_len is not None:
             pos = 0
+            if x.shared_blocks:
+                if block_size is not None:
+                    pos = min(x.shared_blocks * block_size,
+                              x.prompt_len - 1)
+                else:
+                    first = x.chunks[0][1]
+                    if 0 < first < x.prompt_len:
+                        pos = first
             for _, start, n in x.chunks:
                 if start != pos:
                     violations.append(f"req {rid}: chunk committed at "
@@ -277,18 +300,33 @@ def _audit_lifecycles(lcs: Dict[int, Lifecycle],
                         f"{x.prompt_len} prompt tokens")
 
 
+def _pool_free_delta(e: TraceEvent) -> int:
+    """How the event moved the free-block level, refcount-aware: frees
+    return only the blocks whose last owner let go (`released`; absent on
+    pre-sharing traces, where every freed block released), shares remove
+    only their `revived` blocks (live matches just gain an owner), CoW
+    claims `n` fresh blocks and releases none (the old blocks keep their
+    other owners)."""
+    n = e.fields["n"]
+    if e.name == "block_free":
+        return e.fields.get("released", n)
+    if e.name == "block_share":
+        return -e.fields.get("revived", 0)
+    return -n   # block_alloc / block_extend / cow_copy
+
+
 def _audit_pool(events: List[TraceEvent], metadata: Dict[str, Any],
                 violations: List[str], checks: Dict[str, Any]) -> None:
     block_events = [e for e in events if e.name in
-                    ("block_alloc", "block_extend", "block_free")]
+                    ("block_alloc", "block_extend", "block_free",
+                     "block_share", "cow_copy")]
     if not block_events:
         return
     free = metadata.get("usable_blocks")
     if free is None:
         # infer the initial level from the first event's recorded state
         e0 = block_events[0]
-        delta = e0.fields["n"] if e0.name == "block_free" else -e0.fields["n"]
-        free = e0.fields["free_after"] - delta
+        free = e0.fields["free_after"] - _pool_free_delta(e0)
     initial = free
     held: Dict[int, int] = {}
     for e in block_events:
@@ -297,14 +335,27 @@ def _audit_pool(events: List[TraceEvent], metadata: Dict[str, Any],
             violations.append(f"{e.name} rid {e.rid}: negative count {n}")
             continue
         if e.name == "block_free":
-            free += n
+            released = e.fields.get("released", n)
+            if released > n:
+                violations.append(f"block_free rid {e.rid}: released "
+                                  f"{released} > freed {n}")
             held[e.rid] = held.get(e.rid, 0) - n
             if held[e.rid] < 0:
                 violations.append(f"req {e.rid}: freed {n} blocks beyond "
                                   "its holding")
-        else:
-            free -= n
+        elif e.name == "block_share":
+            revived = e.fields.get("revived", 0)
+            if revived > n:
+                violations.append(f"block_share rid {e.rid}: revived "
+                                  f"{revived} > adopted {n}")
             held[e.rid] = held.get(e.rid, 0) + n
+        elif e.name == "cow_copy":
+            # one fresh block swaps in for each shared one: the holding
+            # count is unchanged and nothing returns to the free list
+            pass
+        else:
+            held[e.rid] = held.get(e.rid, 0) + n
+        free += _pool_free_delta(e)
         if free < 0:
             violations.append(f"{e.name} rid {e.rid}: free count went "
                               f"negative ({free})")
@@ -373,7 +424,7 @@ def audit(events: List[TraceEvent], metrics=None,
     checks: Dict[str, Any] = {}
 
     lcs = build_lifecycles(events)
-    _audit_lifecycles(lcs, violations)
+    _audit_lifecycles(lcs, violations, metadata.get("block_size"))
     _audit_pool(events, metadata, violations, checks)
     kinds = _audit_steps(events, violations, checks)
     checks["requests"] = len(lcs)
@@ -416,6 +467,12 @@ def audit(events: List[TraceEvent], metrics=None,
         if preempts != int(metrics.get("preemptions", 0)):
             violations.append(f"preemptions: {preempts} preempt events vs "
                               f"recorded {metrics.get('preemptions')}")
+        if "cow_copies" in metrics:   # absent on pre-sharing snapshots
+            cows = sum(e.fields.get("n", 1) for e in events
+                       if e.name == "cow_copy")
+            if cows != int(metrics["cow_copies"]):
+                violations.append(f"cow_copies: {cows} cow_copy events vs "
+                                  f"recorded {metrics.get('cow_copies')}")
         committed = sum(n for x in lcs.values() for _, _, n in x.chunks)
         if committed != int(metrics.get("chunk_tokens_committed", 0)):
             violations.append(

@@ -1,8 +1,11 @@
 """Property-based `BlockAllocator` invariants (hypothesis): under arbitrary
-interleavings of allocate / extend / free / swap_out / swap_in the allocator
-must keep `free + used == total`, never hand a block to two owners, fail
-loudly on double-free, and only ever grow a table append-only (`extend`
-monotonicity).  `check_invariants()` runs after EVERY operation.
+interleavings of allocate / extend / free / swap_out / swap_in / share /
+copy-on-write / prefix-index registration the allocator must keep every
+block free XOR owned, with each owned block's refcount equal to the number
+of tables containing it, never hand the same free block to two owners, fail
+loudly on double-free, only ever grow a table append-only (`extend`
+monotonicity), and clamp `extend` to the table bound.
+`check_invariants()` runs after EVERY operation.
 
 The same interpreter is exercised with a fixed numpy seed (no hypothesis)
 from `test_serving_runtime.py`'s churn test; this module is the adversarial
@@ -11,6 +14,7 @@ search on top.  CI pins the hypothesis profile via HYPOTHESIS_PROFILE=ci
 job is reproducible.
 """
 
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip(
@@ -18,6 +22,11 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.serve.kvcache import NULL_BLOCK, BlockAllocator, KVCacheConfig
+
+# one common token stream for the prefix-index ops: every registration keys
+# prefixes of THIS array, so registrations collide (first wins) and
+# match_prefix actually hits
+TOKENS = np.arange(1, 4097, dtype=np.int32)
 
 
 def run_op_sequence(cfg: KVCacheConfig, ops) -> BlockAllocator:
@@ -30,14 +39,14 @@ def run_op_sequence(cfg: KVCacheConfig, ops) -> BlockAllocator:
     live, swapped = [], []
     next_rid = 1
 
-    def check(extra_free_delta=0):
+    def check():
         alloc.check_invariants()
         assert alloc.num_free + alloc.num_used == usable
         assert sorted(alloc.tables) == sorted(live)
         assert sorted(alloc.swapped) == sorted(swapped)
 
     for kind, x in ops:
-        kind = kind % 5
+        kind = kind % 8
         if kind == 0:                                   # allocate
             rid = next_rid
             next_rid += 1
@@ -50,33 +59,45 @@ def run_op_sequence(cfg: KVCacheConfig, ops) -> BlockAllocator:
                 assert len(blocks) == n
                 assert NULL_BLOCK not in blocks
                 live.append(rid)
-        elif kind == 1 and live:                        # extend
-            rid = live[x % len(live)]
-            before = list(alloc.tables[rid])
-            target = x % (usable * cfg.block_size + 4)
-            need = max(0, cfg.blocks_for(target) - len(before))
-            ok = alloc.extend(rid, target)
-            after = alloc.tables[rid]
-            assert after[: len(before)] == before       # append-only growth
-            if ok:
-                assert len(after) == len(before) + need
-                assert len(after) * cfg.block_size >= min(
-                    target, len(before) * cfg.block_size)
+        elif kind == 1 and (live or swapped):           # extend
+            if not live:
+                # swapped-out rids must be rejected loudly, not KeyError
+                with pytest.raises(ValueError):
+                    alloc.extend(swapped[x % len(swapped)], 1)
             else:
-                assert need > 0 and after == before     # dry pool: unchanged
+                rid = live[x % len(live)]
+                before = list(alloc.tables[rid])
+                target = x % (usable * cfg.block_size + 4)
+                want = cfg.blocks_for(target)
+                need = max(0, want - len(before))
+                ok = alloc.extend(rid, target)
+                after = alloc.tables[rid]
+                assert after[: len(before)] == before   # append-only growth
+                if want > cfg.max_blocks_per_seq:
+                    assert not ok and after == before   # table-bound clamp
+                elif ok:
+                    assert len(after) == len(before) + need
+                    assert len(after) * cfg.block_size >= min(
+                        target, len(before) * cfg.block_size)
+                else:
+                    assert need > 0 and after == before  # dry pool: unchanged
         elif kind == 2 and live:                        # free (+ double-free)
             rid = live.pop(x % (len(live) + 1) - 1)
-            held = len(alloc.tables[rid])
+            table = list(alloc.tables[rid])
+            held = len(table)
+            # refcount semantics: only blocks whose LAST owner lets go
+            # return to the free list
+            expect_released = sum(1 for b in table if alloc.refcount[b] == 1)
+            free_before = alloc.num_free
             freed = alloc.free(rid)
             assert freed == held
+            assert alloc.num_free == free_before + expect_released
             with pytest.raises(KeyError):
                 alloc.free(rid)                         # idempotent-by-error
         elif kind == 3 and live:                        # swap_out
             rid = live.pop(x % len(live))
             held = len(alloc.tables[rid])
-            free_before = alloc.num_free
             assert alloc.swap_out(rid) == held
-            assert alloc.num_free == free_before + held
             assert alloc.swapped[rid] == held
             swapped.append(rid)
         elif kind == 4 and swapped:                     # swap_in
@@ -91,13 +112,73 @@ def run_op_sequence(cfg: KVCacheConfig, ops) -> BlockAllocator:
                 assert len(blocks) == n
                 swapped.remove(rid)
                 live.append(rid)
+        elif kind == 5 and live:                        # share (refcount +1)
+            # adopt a donor table's prefix — plus, sometimes, blocks pulled
+            # straight off the free list (the revival path: a freed block's
+            # refcount restarts at 1 when a new owner adopts it)
+            donor = live[x % len(live)]
+            blocks = list(alloc.tables[donor][: x % 4])
+            n_revive = min((x >> 4) % 3, alloc.num_free)
+            blocks += [b for b in alloc._free[:n_revive] if b not in blocks]
+            rid = next_rid
+            next_rid += 1
+            revived = sum(1 for b in blocks if b not in alloc.refcount)
+            free_before = alloc.num_free
+            alloc.share(rid, blocks)
+            assert alloc.num_free == free_before - revived
+            assert alloc.tables[rid] == blocks
+            live.append(rid)
+        elif kind == 6 and live:                        # copy-on-write
+            rid = live[x % len(live)]
+            table = alloc.tables[rid]
+            if table:
+                bi = (x >> 4) % len(table)
+                src = table[bi]
+                is_shared = alloc.refcount[src] > 1
+                free_before = alloc.num_free
+                if is_shared and alloc.num_free == 0:
+                    with pytest.raises(MemoryError):
+                        alloc.cow(rid, bi)              # dry: caller preempts
+                elif is_shared:
+                    old, new = alloc.cow(rid, bi)
+                    assert old == src and new != src
+                    assert alloc.tables[rid][bi] == new
+                    assert alloc.refcount[new] == 1
+                    # the old block keeps its other owners — nothing freed
+                    assert alloc.refcount[old] >= 1
+                    assert alloc.num_free == free_before - 1
+                else:
+                    assert alloc.cow(rid, bi) is None   # private: no copy
+                    assert alloc.tables[rid][bi] == src
+        elif kind == 7 and cfg.prefix_sharing:          # prefix index
+            if live and x & 1:
+                # register a live table's full-block prefixes of the common
+                # token stream (first registration wins on collisions)
+                rid = live[x % len(live)]
+                n_tok = min(len(alloc.tables[rid]) * cfg.block_size,
+                            len(TOKENS))
+                alloc.register_prefix(rid, TOKENS, n_tok)
+            else:
+                # admit an adopter through the index: match_prefix + share,
+                # reviving any matched block parked on the free list
+                m = (x % (usable + 1)) * cfg.block_size
+                matched = alloc.match_prefix(TOKENS[:m])
+                if matched:
+                    rid = next_rid
+                    next_rid += 1
+                    revived = sum(1 for b in matched
+                                  if b not in alloc.refcount)
+                    free_before = alloc.num_free
+                    alloc.share(rid, matched)
+                    assert alloc.num_free == free_before - revived
+                    live.append(rid)
         check()
 
     return alloc
 
 
 ops_strategy = st.lists(
-    st.tuples(st.integers(0, 4), st.integers(0, 1 << 16)), max_size=150)
+    st.tuples(st.integers(0, 7), st.integers(0, 1 << 16)), max_size=150)
 
 
 @given(num_blocks=st.integers(2, 48),
@@ -106,7 +187,8 @@ ops_strategy = st.lists(
 @settings(deadline=None)
 def test_allocator_invariants_under_random_ops(num_blocks, block_size, ops):
     cfg = KVCacheConfig(num_blocks=num_blocks, block_size=block_size,
-                        max_blocks_per_seq=max(1, num_blocks - 1))
+                        max_blocks_per_seq=max(1, num_blocks - 1),
+                        prefix_sharing=True)
     run_op_sequence(cfg, ops)
 
 
@@ -114,8 +196,10 @@ def test_allocator_invariants_under_random_ops(num_blocks, block_size, ops):
 @settings(deadline=None)
 def test_allocator_drains_back_to_full_pool(ops):
     """After any program, releasing every survivor restores the exact free
-    pool — no block is ever lost or duplicated across swap round-trips."""
-    cfg = KVCacheConfig(num_blocks=17, block_size=4, max_blocks_per_seq=16)
+    pool — no block is ever lost or duplicated across swap round-trips,
+    shares, copy-on-writes or index revivals."""
+    cfg = KVCacheConfig(num_blocks=17, block_size=4, max_blocks_per_seq=16,
+                        prefix_sharing=True)
     alloc = run_op_sequence(cfg, ops)
     for rid in list(alloc.tables):
         alloc.free(rid)

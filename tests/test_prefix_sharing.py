@@ -1,0 +1,377 @@
+"""Prefix sharing: refcounted copy-on-write block reuse + packed resumes.
+
+The load-bearing contracts pinned here:
+
+  * `BlockAllocator.extend` CLAMPS at `max_blocks_per_seq` (returns False,
+    table untouched) instead of growing a table wider than the compiled
+    `table_array` — the old overgrowth broadcast-crashed at dispatch; and
+    extending a swapped-out rid raises a clear ValueError, not a bare
+    KeyError out of the tables dict;
+  * the prefix index + share/CoW lifecycle at the allocator level: full-
+    block prompt prefixes keyed first-wins, `match_prefix` walking the
+    longest indexed chain, `share` adopting (and REVIVING refcount-0
+    blocks parked on the free list), `cow` copying a shared block into a
+    private one (the source keeps its other owners — nothing is freed) and
+    no-oping on private blocks, with `check_invariants` holding throughout
+    and the pool draining back to full;
+  * sharing is INVISIBLE to the tokens: with `prefix_sharing=True` a
+    workload of requests sharing a hot system prompt emits byte-identical
+    streams to the sharing-off engine — greedy AND sampled — while
+    committing >= 40% fewer chunk tokens (prefix_hit_tokens is exactly the
+    work the chunk lane never did), exercising claim-time CoW via a
+    full-prompt match; the compiled-program pins hold (two step
+    executables, admission compiles nothing, at most one CoW executable);
+  * a resume burst of K swapped requests costs ceil(K / resume_segments)
+    commit invocations — ONE commit executable across group sizes (ragged
+    groups pad to the full segment count);
+  * slow multi-seed Poisson fuzz layering pool-pressure preemption of
+    shared-block holders on top of sharing: streams still match the
+    sharing-off reference byte for byte.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import single_device_mesh
+from repro.models import build_model
+from repro.serve.kvcache import NULL_BLOCK, BlockAllocator, KVCacheConfig
+from repro.serve.runtime import ContinuousEngine, RuntimeConfig
+from repro.serve.sampling import SamplingParams
+
+import jax
+
+
+# -------------------------------------------------------------- allocator
+def _cfg(**kw):
+    base = dict(num_blocks=16, block_size=4, max_blocks_per_seq=3,
+                prefix_sharing=True)
+    base.update(kw)
+    return KVCacheConfig(**base)
+
+
+def test_extend_clamps_at_the_table_bound():
+    """Growing past `max_blocks_per_seq` must refuse (False) and leave the
+    table untouched — the compiled table_array is exactly that wide, so an
+    overgrown table would broadcast-crash at the NEXT dispatch, far from
+    the bug."""
+    alloc = BlockAllocator(_cfg())
+    alloc.allocate(1, 2)
+    assert alloc.extend(1, 12)                   # 3 blocks: at the bound
+    table = list(alloc.tables[1])
+    assert len(table) == 3
+    free_before = alloc.num_free
+    assert not alloc.extend(1, 13)               # 4th block: clamped
+    assert alloc.tables[1] == table              # nothing allocated
+    assert alloc.num_free == free_before
+    alloc.check_invariants()
+
+
+def test_extend_on_swapped_rid_raises_value_error():
+    alloc = BlockAllocator(_cfg())
+    alloc.allocate(7, 2)
+    alloc.swap_out(7)
+    with pytest.raises(ValueError, match="swap"):
+        alloc.extend(7, 9)
+    alloc.swap_in(7)
+    assert alloc.extend(7, 9)                    # alive again: grows fine
+    alloc.check_invariants()
+
+
+def test_prefix_index_share_cow_and_revival():
+    """The full allocator-level lifecycle: register -> match -> share ->
+    CoW -> free -> revive-from-free-list, invariants after every move."""
+    cfg = _cfg(max_blocks_per_seq=8)
+    alloc = BlockAllocator(cfg)
+    tokens = np.arange(100, 116, dtype=np.int32)     # 16 tokens = 4 blocks
+
+    b = alloc.allocate(1, 4)
+    alloc.register_prefix(1, tokens, 16)
+    assert alloc.match_prefix(tokens[:12]) == b[:3]
+    assert alloc.match_prefix(tokens[:11]) == b[:2]  # partial block ignored
+    assert alloc.match_prefix(tokens[:3]) == []      # shorter than a block
+    assert alloc.match_prefix(tokens[::-1]) == []    # different content
+
+    # adopter shares the 3-block prefix: refcounts climb, no new blocks
+    free_before = alloc.num_free
+    alloc.share(2, alloc.match_prefix(tokens[:12]))
+    assert alloc.num_free == free_before
+    assert [alloc.refcount[x] for x in b] == [2, 2, 2, 1]
+    alloc.check_invariants()
+
+    # CoW: the adopter's first block copies; the source keeps its owner
+    old, new = alloc.cow(2, 0)
+    assert old == b[0] and new != old
+    assert alloc.tables[2][0] == new
+    assert alloc.refcount[old] == 1 and alloc.refcount[new] == 1
+    assert alloc.cow(2, 0) is None               # now private: no copy
+    assert alloc.drain_cow_copies() == 1
+    alloc.check_invariants()
+
+    # registrant leaves: only its now-sole-owned blocks return to the free
+    # list (b[1], b[2] survive through rid 2), index entries persist
+    free_before = alloc.num_free
+    alloc.free(1)
+    assert alloc.num_free == free_before + 2     # b[0], b[3] released
+    alloc.check_invariants()
+
+    # a full-prefix match REVIVES the freed-but-indexed blocks off the
+    # free list: refcount restarts at 1, free count drops by the revivals
+    matched = alloc.match_prefix(tokens[:16])
+    assert matched == [b[0], b[1], b[2], b[3]]
+    free_before = alloc.num_free
+    alloc.share(3, matched)
+    assert alloc.num_free == free_before - 2     # b[0], b[3] revived
+    assert alloc.refcount[b[0]] == 1 and alloc.refcount[b[3]] == 1
+    assert alloc.refcount[b[1]] == 2 and alloc.refcount[b[2]] == 2
+    alloc.check_invariants()
+
+    # first-wins: re-registering the same prefixes changes nothing
+    index_before = dict(alloc._index)
+    alloc.register_prefix(3, tokens, 16)
+    assert alloc._index == index_before
+
+    # drain: every owner released -> the pool is whole again
+    alloc.free(2)
+    alloc.free(3)
+    alloc.check_invariants()
+    assert alloc.num_used == 0
+    assert alloc.num_free == cfg.num_blocks - 1
+
+
+def test_prefix_index_disabled_without_the_flag():
+    alloc = BlockAllocator(_cfg(prefix_sharing=False))
+    tokens = np.arange(16, dtype=np.int32)
+    alloc.allocate(1, 4)
+    alloc.register_prefix(1, tokens, 16)         # no-op when disabled
+    assert alloc.match_prefix(tokens[:8]) == []
+    assert not alloc._index
+    alloc.check_invariants()
+
+
+def test_cow_on_a_dry_pool_raises_memory_error():
+    alloc = BlockAllocator(_cfg(num_blocks=3, max_blocks_per_seq=2))
+    b = alloc.allocate(1, 2)
+    alloc.share(2, b)                            # both blocks shared
+    assert alloc.num_free == 0
+    with pytest.raises(MemoryError):
+        alloc.cow(2, 0)                          # caller preempts + retries
+    alloc.check_invariants()
+    assert alloc.tables[2] == b                  # nothing half-applied
+
+
+# -------------------------------------------------------------- engine e2e
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                           vocab=97)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, chunk_tokens, chunk_segments=4, num_blocks=None,
+            max_slots=4, now_fn=None, max_new=10, prefix_sharing=False):
+    return ContinuousEngine(
+        model, params, single_device_mesh(), DEFAULT_RULES,
+        RuntimeConfig(max_slots=max_slots, block_size=8, max_blocks_per_seq=6,
+                      num_blocks=num_blocks, max_new_tokens=max_new,
+                      chunk_tokens=chunk_tokens,
+                      chunk_segments=chunk_segments,
+                      prefix_sharing=prefix_sharing),
+        now_fn=now_fn)
+
+
+def _system_prompt_workload(cfg, rng):
+    """A hot 24-token (3 full blocks at block_size=8) system prompt: one
+    registrant, one EXACT full-prompt duplicate (forces claim-time CoW on
+    the last shared block), several suffixed variants, one unrelated
+    prompt.  The registrant arrives alone; the duplicate arrives while the
+    registrant still HOLDS its blocks (so its final-token chunk lands in a
+    block with two owners — the copy-on-write case, not a sole-owner
+    revival); the rest arrive after both retire, adopting through the
+    index by reviving the freed-but-keyed blocks."""
+    system = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+             for n in (6, 3, 5, 7, 4)]
+    prompts = [np.concatenate([system, tails[0]]),          # registrant
+               system.copy(),                               # exact match
+               np.concatenate([system, tails[1]]),
+               np.concatenate([system, tails[2]]),
+               np.concatenate([system, tails[3]]),
+               np.concatenate([system, tails[4]]),
+               rng.integers(0, cfg.vocab, size=7).astype(np.int32)]
+    arrivals = [0.0, 0.3] + [2.0 + 0.01 * i for i in range(len(prompts) - 2)]
+    budgets = [int(rng.integers(3, 9)) for _ in prompts]
+    return prompts, arrivals, budgets
+
+
+@pytest.mark.parametrize("sampled", [False, True], ids=["greedy", "sampled"])
+def test_prefix_sharing_identity_and_chunk_token_savings(tiny_lm, sampled):
+    """Fast differential: sharing-on and sharing-off engines replay the
+    same system-prompt workload under the same virtual clock and must emit
+    byte-identical streams (greedy and sampled), while the sharing engine
+    commits >= 40% fewer chunk tokens, adopts every saved token through
+    the prefix index (committed + adopted == total prompt tokens), and
+    copy-on-writes at least once (the exact-duplicate prompt's last shared
+    block).  Program pins: two step executables, at most one CoW
+    executable, zero commit compiles (no preemption here), admission
+    compiles nothing."""
+    cfg, model, params = tiny_lm
+    rng = np.random.default_rng(3)
+    prompts, arrivals, budgets = _system_prompt_workload(cfg, rng)
+
+    def replay(prefix_sharing):
+        clock = {"t": 0.0}
+        eng = _engine(model, params, chunk_tokens=16,
+                      now_fn=lambda: clock["t"],
+                      prefix_sharing=prefix_sharing)
+        for i, (p, a, b) in enumerate(zip(prompts, arrivals, budgets)):
+            eng.submit(p, max_new_tokens=b, arrival_time=a,
+                       sampling=(SamplingParams(temperature=0.8, top_k=12,
+                                                seed=101 + i)
+                                 if sampled else None))
+        with eng.mesh:
+            while eng.scheduler.has_work:
+                ran = eng.step()
+                clock["t"] += 0.2 if ran else 0.05
+        assert eng._unified._cache_size() == 1
+        assert eng._decode_only._cache_size() == 1
+        assert eng._commit._cache_size() == 0      # nothing was preempted
+        assert eng._cow._cache_size() <= 1
+        eng.cache.alloc.check_invariants()
+        assert eng.cache.alloc.num_used == 0
+        return eng, {r.rid: r.output for r in eng._done}
+
+    off, out_off = replay(prefix_sharing=False)
+    on, out_on = replay(prefix_sharing=True)
+    assert out_on == out_off
+
+    total = sum(len(p) for p in prompts)
+    assert off.metrics.chunk_tokens_committed == total
+    assert off.metrics.prefix_hit_tokens == 0
+    assert off.metrics.cow_copies == 0
+    # every prompt token is either committed by the chunk lane or adopted
+    # from the index — and the hot prefix makes adoption the bulk of it
+    mon = on.metrics
+    assert mon.prefix_hit_tokens > 0
+    assert mon.chunk_tokens_committed + mon.prefix_hit_tokens == total
+    assert mon.chunk_tokens_committed <= 0.6 * total
+    # the exact-duplicate prompt re-commits its final token into a shared
+    # block -> claim-time copy-on-write ran, on the compiled copy program
+    assert mon.cow_copies >= 1
+    assert on._cow._cache_size() == 1
+
+
+def test_resume_burst_packs_commit_invocations(tiny_lm):
+    """A burst of K swapped requests resumes in ceil(K / resume_segments)
+    commit invocations — ONE commit executable across ragged group sizes
+    (groups pad to the full segment count) — and the preempted streams
+    still match an undisturbed engine's byte for byte."""
+    cfg, model, params = tiny_lm
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in (9, 6, 12)]
+
+    def fresh(**kw):
+        eng = _engine(model, params, chunk_tokens=16, chunk_segments=2,
+                      max_slots=3, max_new=6, **kw)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6, arrival_time=0.0)
+        return eng
+
+    eng = fresh()
+    assert eng.adapter.resume_segments == 2
+    with eng.mesh:
+        # run until every request is in the decode batch, then swap ALL
+        # of them out — the next step re-admits the burst together
+        while any(r is None or r.prefilling for r in eng.scheduler.slots):
+            eng.step()
+        for req in [r for r in eng.scheduler.slots if r is not None]:
+            eng._preempt(req)
+        assert eng.metrics.preemptions == 3
+        assert all(r is None for r in eng.scheduler.slots)
+        eng.step()                                  # resume burst: [2, 1]
+        assert eng.metrics.resume_commits == math.ceil(3 / 2) == 2
+        assert eng.metrics.packed_resumes == 2      # only the shared pair
+        assert eng._commit._cache_size() == 1       # padded: ONE shape
+        while eng.scheduler.has_work:
+            eng.step()
+    assert eng._commit._cache_size() == 1
+    eng.cache.alloc.check_invariants()
+    assert eng.cache.alloc.num_used == 0
+
+    base = fresh()
+    with base.mesh:
+        while base.scheduler.has_work:
+            base.step()
+    assert base.metrics.resume_commits == 0
+    assert {r.rid: r.output for r in eng._done} \
+        == {r.rid: r.output for r in base._done}
+
+
+# ------------------------------------------------------------- slow fuzz
+@pytest.mark.slow
+def test_differential_fuzz_prefix_sharing_under_pressure(tiny_lm):
+    """Slow differential fuzz: Poisson arrival traces where most requests
+    share a hot 16-token system prompt (mixed greedy/sampled), replayed
+    through sharing-off, sharing-on, and sharing-on-under-pool-pressure
+    engines on the same virtual clock.  Streams must match byte for byte
+    across seeds — including runs whose shrunken pool preempts requests
+    HOLDING shared blocks — with the usual program pins, invariants and
+    full drain."""
+    cfg, model, params = tiny_lm
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        n = 10
+        system = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+        arrivals = np.cumsum(rng.exponential(0.3, size=n))
+        prompts, sampling = [], []
+        for i in range(n):
+            if rng.random() < 0.7:
+                tail = rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(1, 9)))
+                prompts.append(np.concatenate([system, tail.astype(np.int32)]))
+            else:
+                prompts.append(rng.integers(
+                    0, cfg.vocab, size=int(rng.integers(3, 13)))
+                    .astype(np.int32))
+            sampling.append(SamplingParams(temperature=0.7, top_k=16,
+                                           seed=1000 + i)
+                            if i % 3 == 0 else None)
+        budgets = [int(rng.integers(2, 12)) for _ in range(n)]
+
+        def replay(prefix_sharing, num_blocks=None):
+            clock = {"t": 0.0}
+            eng = _engine(model, params, chunk_tokens=6, chunk_segments=4,
+                          num_blocks=num_blocks, max_slots=3,
+                          now_fn=lambda: clock["t"],
+                          prefix_sharing=prefix_sharing)
+            for a, p, b, s in zip(arrivals, prompts, budgets, sampling):
+                eng.submit(p, max_new_tokens=b, arrival_time=float(a),
+                           sampling=s)
+            with eng.mesh:
+                while eng.scheduler.has_work:
+                    ran = eng.step()
+                    clock["t"] += 0.2 if ran else 0.05
+            assert eng._unified._cache_size() == 1
+            assert eng._decode_only._cache_size() <= 1
+            assert eng._cow._cache_size() <= 1
+            eng.cache.alloc.check_invariants()
+            assert eng.cache.alloc.num_used == 0
+            return eng, {r.rid: r.output for r in eng._done}
+
+        _, out_off = replay(prefix_sharing=False)
+        shared, out_on = replay(prefix_sharing=True)
+        assert out_on == out_off, f"shared stream diverged (seed {seed})"
+        assert shared.metrics.prefix_hit_tokens > 0, \
+            f"no prefix hits (seed {seed})"
+        # sharing itself shrinks block demand, so the pressure pool must be
+        # tighter than the packing fuzz's to still force preemption
+        small, out_small = replay(prefix_sharing=True, num_blocks=8)
+        assert out_small == out_off, \
+            f"shared+preempted stream diverged (seed {seed})"
+        assert small.metrics.preemptions >= 1, f"no preemption (seed {seed})"

@@ -148,6 +148,8 @@ def test_bench_serving_csv_schema_pinned():
         "serve_sampled_mismatches",
         "serve_packing_packed_tok_s",
         "serve_packing_single_seg_tok_s",
+        "serve_prefix_on_tok_s",
+        "serve_prefix_off_tok_s",
         "serve_interference_chunked_decode_tbt_p95_s",
         "serve_interference_unchunked_decode_tbt_p95_s",
         "serve_pool_1.00x_tok_s",
@@ -163,9 +165,11 @@ def test_bench_serving_csv_schema_pinned():
     ]
     # sections the smoke run skips drop their rows, never reorder the rest
     assert bs.expected_csv_names(pressure=False, lanes=False, ssm=False) == \
-        bs.expected_csv_names()[:10]
+        bs.expected_csv_names()[:12]
     assert bs.expected_csv_names(sampled=False) == \
         [n for n in bs.expected_csv_names() if "sampled" not in n]
+    assert bs.expected_csv_names(prefix=False) == \
+        [n for n in bs.expected_csv_names() if "prefix" not in n]
     row = bs.csv_row("serve_fixed_tok_s", np.float64(12.5), "derived note")
     assert row == ("serve_fixed_tok_s", 12.5, "derived note")
     assert isinstance(row[1], float) and len(row) == len(bs.CSV_COLUMNS)
@@ -203,24 +207,27 @@ def tiny_lm():
 
 def _engine(model, params, *, chunk_tokens=8, chunk_segments=4,
             num_blocks=None, max_slots=4, now_fn=None, trace=None,
-            max_new=10):
+            max_new=10, prefix_sharing=False):
     return ContinuousEngine(
         model, params, single_device_mesh(), DEFAULT_RULES,
         RuntimeConfig(max_slots=max_slots, block_size=8, max_blocks_per_seq=6,
                       num_blocks=num_blocks, max_new_tokens=max_new,
                       chunk_tokens=chunk_tokens,
-                      chunk_segments=chunk_segments),
+                      chunk_segments=chunk_segments,
+                      prefix_sharing=prefix_sharing),
         now_fn=now_fn, trace=trace)
 
 
 def _replay(model, params, arrivals, prompts, budgets, *, trace=None,
-            num_blocks=None, max_slots=3, chunk_tokens=6):
+            num_blocks=None, max_slots=3, chunk_tokens=6,
+            prefix_sharing=False):
     """Drive a Poisson workload under the deterministic virtual clock the
     differential fuzz uses; returns (engine, {rid: tokens})."""
     clock = {"t": 0.0}
     eng = _engine(model, params, chunk_tokens=chunk_tokens,
                   num_blocks=num_blocks, max_slots=max_slots,
-                  now_fn=lambda: clock["t"], trace=trace)
+                  now_fn=lambda: clock["t"], trace=trace,
+                  prefix_sharing=prefix_sharing)
     for a, p, b in zip(arrivals, prompts, budgets):
         eng.submit(p, max_new_tokens=b, arrival_time=float(a))
     eng.metrics.start_time = 0.0
@@ -344,6 +351,85 @@ def test_audit_bites_on_corrupted_traces(tiny_lm):
     snap["tokens_out"] += 5
     r = traceview.audit(rec.events, snap, meta)
     assert not r.ok and any("tokens_out" in v for v in r.violations)
+
+
+def _prefix_workload(cfg, rng):
+    """One registrant carrying a 16-token (two full blocks) system prompt,
+    one exact duplicate arriving while the registrant still holds its
+    blocks (claim-time CoW on the last shared block), then late adopters —
+    the sequencing tests/test_prefix_sharing.py verified end to end."""
+    system = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, cfg.vocab, size=6).astype(np.int32)]),
+        system.copy()]
+    prompts += [np.concatenate(
+        [system, rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(2, 8))).astype(np.int32)])
+        for _ in range(4)]
+    arrivals = [0.0, 0.7] + [1.8 + 0.1 * i for i in range(4)]
+    budgets = [6] + [int(rng.integers(2, 8)) for _ in range(5)]
+    return arrivals, prompts, budgets
+
+
+def test_traced_prefix_sharing_replay_emits_pool_events_and_passes_audit(
+        tiny_lm):
+    """A sharing-on replay emits the refcount taxonomy — `block_share` on
+    index adoption, `cow_copy` when a write lands in a co-owned block —
+    and the refcount-aware pool replay conserves through shares, copies,
+    revivals and partial frees, with the cow_copies metric cross-checked
+    against the events."""
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _prefix_workload(
+        cfg, np.random.default_rng(6))
+    rec = TraceRecorder()
+    eng, _ = _replay(model, params, arrivals, prompts, budgets, trace=rec,
+                     prefix_sharing=True)
+    assert eng.metrics.prefix_hit_tokens > 0
+    assert eng.metrics.cow_copies >= 1
+    names = [e.name for e in rec.events]
+    assert "block_share" in names and "cow_copy" in names
+    shares = [e for e in rec.events if e.name == "block_share"]
+    assert all({"n", "revived", "free_after"} <= set(e.fields)
+               for e in shares)
+    report = traceview.audit(rec.events, metrics=eng.metrics,
+                             metadata={"usable_blocks":
+                                       eng.kv_cfg.num_blocks - 1,
+                                       "block_size":
+                                       eng.kv_cfg.block_size})
+    assert report.ok, report.summary()
+
+
+def test_audit_bites_on_a_forged_share(tiny_lm):
+    """Refcount semantics make shares auditable: a forged `block_share`
+    (claiming one more free-list revival than happened) keeps its OWN
+    free_after arithmetic consistent but breaks the pool chain for every
+    later event — the audit must flag it.  Inflating the cow_copies
+    aggregate against the recorded cow_copy events must also fail."""
+    cfg, model, params = tiny_lm
+    arrivals, prompts, budgets = _prefix_workload(
+        cfg, np.random.default_rng(6))
+    rec = TraceRecorder()
+    eng, _ = _replay(model, params, arrivals, prompts, budgets, trace=rec,
+                     prefix_sharing=True)
+    meta = {"usable_blocks": eng.kv_cfg.num_blocks - 1,
+            "block_size": eng.kv_cfg.block_size}
+    assert traceview.audit(rec.events, eng.metrics, meta).ok
+
+    forged = [TraceEvent(e.name, e.t, e.rid, dict(e.fields))
+              for e in rec.events]
+    for e in forged:
+        if e.name == "block_share":
+            e.fields["revived"] += 1
+            e.fields["free_after"] -= 1       # self-consistent forgery
+            break
+    r = traceview.audit(forged, eng.metrics, meta)
+    assert not r.ok and any("free_after" in v or "revived" in v
+                            for v in r.violations)
+
+    snap = metrics_snapshot(eng.metrics)
+    snap["cow_copies"] += 1
+    r = traceview.audit(rec.events, snap, meta)
+    assert not r.ok and any("cow" in v for v in r.violations)
 
 
 def test_tracing_is_invisible_to_tokens_and_compiles(tiny_lm):
