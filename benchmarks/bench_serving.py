@@ -82,6 +82,17 @@ replay exercises slot preemption + host swap, vs the arrival-aware
 tokens/s both engines, TTFT p95, preemption count, and a zero-errors
 guard (every submitted request must complete).
 
+A TENSOR-PARALLEL sweep (skip with `--no-tp`; needs `--devices 4`)
+replays a workload prefix at serving-mesh widths 1x1 / 1x2 / 1x4 —
+device-subset meshes over virtual host devices (repro.platform sets
+--xla_force_host_platform_device_count before jax imports) — each width
+under its own tuned plan (`build_serve_plan(model_parallel=tp)` races
+replicated vs model-parallel per stage matmul, pricing the implied
+collectives), plus tuned-vs-forced-replicated at the widest mesh.  Token
+streams are byte-identical across widths (pinned by
+tests/test_tp_serving.py); with fewer than 4 host devices the sweep's
+CSV rows emit 0.0 with a "skipped" note so the schema never moves.
+
 `--sampling mixed` gives every headline request per-request
 SamplingParams from a fixed cycle (greedy / temperature / temperature+
 top-k / temperature+top-p, unique seed each) instead of all-greedy — the
@@ -112,6 +123,13 @@ import time
 from collections import deque
 from typing import List
 
+# must run before anything imports jax: --devices N asks the CPU backend
+# for N virtual host devices, and the backend latches XLA_FLAGS at the
+# first jax import (see repro.platform) — the TP mesh sweep needs 4
+from repro import platform
+
+platform.configure_from_argv()
+
 import jax
 import numpy as np
 
@@ -120,7 +138,7 @@ from repro.core.plan import InferencePlan, OpChoice
 from repro.core.search.tuner import Tuner
 from repro.distributed.sharding import DEFAULT_RULES
 from repro.kernels.dispatch import MATMUL_ROLES
-from repro.launch.mesh import single_device_mesh
+from repro.launch.mesh import single_device_mesh, tp_mesh
 from repro.models import build_model
 from repro.serve import (
     ContinuousEngine,
@@ -313,6 +331,91 @@ def warm_engine(engine: ContinuousEngine, vocab: int, prompt_hi: int) -> None:
                   .astype(np.int32), max_new_tokens=2)
     engine.run()
     engine.reset_metrics()
+
+
+# --------------------------------------------------- tensor-parallel sweep
+TP_WIDTHS = (1, 2, 4)
+
+# the replicated baseline: DEFAULT_RULES with every model-axis rule the
+# serving path shards knocked out, so the engine serves a WIDE mesh with
+# fully replicated params and pools (serve_rules only ever narrows, so
+# this stays replicated whatever the plan's layout verdicts say)
+REPLICATED_RULES = DEFAULT_RULES.replace(
+    heads=None, kv_heads=None, ffn=None, experts=None, vocab=None,
+    embed_vec=None, ssm_heads=None, conv_dim=None)
+
+
+def _layout_summary(router: PlanRouter, stage: str = "decode") -> str:
+    """Compressed per-stage layout table for CSV derived columns and trace
+    metadata: 'attention:mp,lm_head:rep,...'."""
+    table = router.layout_table(stage)
+    return ",".join(f"{k}:{'mp' if v == 'model_parallel' else 'rep'}"
+                    for k, v in sorted(table.items()))
+
+
+def tp_sweep(model, params, cfg, rcfg: RuntimeConfig, workload,
+             verbose: bool = True) -> dict:
+    """Tensor-parallel mesh sweep: the same Poisson workload replayed at
+    mesh widths 1/2/4 — device-SUBSET meshes (`tp_mesh`), so one
+    --xla_force_host_platform_device_count=4 process races all three —
+    each width under its own tuned plan (`build_serve_plan(model_parallel=
+    tp)`: the layout race prices the implied collectives next to the
+    matmul lanes, and the winning per-stage layouts reach the step
+    builders through `serve_rules`).  A second leg compares the widest
+    mesh's TUNED layouts against a forced-replicated baseline with the
+    same backend lanes.  Token streams are byte-identical across widths
+    (pinned by tests/test_tp_serving.py); on this CPU container the
+    tokens/s deltas measure dispatch/collective overhead on virtual
+    devices, not TPU interconnect behaviour."""
+    n_dev = jax.local_device_count()
+    results: dict = {"devices": n_dev, "skipped": n_dev < max(TP_WIDTHS)}
+    if results["skipped"]:
+        if verbose:
+            print(f"tp sweep skipped: {n_dev} host device(s) < "
+                  f"{max(TP_WIDTHS)} (relaunch with --devices "
+                  f"{max(TP_WIDTHS)})")
+        return results
+    prompt_hi = max(len(w["prompt"]) for w in workload)
+    widest_router = None
+    for tp in TP_WIDTHS:
+        plan = build_serve_plan(
+            cfg, prefill_len=prompt_hi, slots=rcfg.max_slots,
+            max_seq=rcfg.max_seq, chunk_tokens=rcfg.chunk_width,
+            tuner=Tuner(methods=("random",), random_budget=16),
+            model_parallel=tp)
+        router = PlanRouter(plan)
+        engine = ContinuousEngine(model, params, tp_mesh(tp), DEFAULT_RULES,
+                                  rcfg, router=router)
+        warm_engine(engine, cfg.vocab, prompt_hi)
+        r = drive_continuous(engine, workload)
+        s = engine.metrics.summary()
+        r.update(ttft_p95_s=s["ttft_p95_s"], mesh=engine.mesh_tag,
+                 layouts=_layout_summary(router))
+        results[tp] = r
+        if tp == max(TP_WIDTHS):
+            widest_router = router
+        if verbose:
+            print(f"mesh {engine.mesh_tag}: {r['tokens_per_s']:8.1f} tok/s "
+                  f"| ttft p95 {r['ttft_p95_s']:6.2f}s | "
+                  f"layouts {r['layouts']}")
+    # tuned-vs-replicated at the widest mesh: same plan (same backend
+    # lanes), base rules knocked down to replicated — isolates the layout
+    # dimension the tuner races
+    engine = ContinuousEngine(model, params, tp_mesh(max(TP_WIDTHS)),
+                              REPLICATED_RULES, rcfg, router=widest_router)
+    warm_engine(engine, cfg.vocab, prompt_hi)
+    r = drive_continuous(engine, workload)
+    s = engine.metrics.summary()
+    r.update(ttft_p95_s=s["ttft_p95_s"], mesh=engine.mesh_tag,
+             layouts="forced replicated")
+    results["replicated"] = r
+    results["tuned"] = results[max(TP_WIDTHS)]
+    if verbose:
+        t, p = results["tuned"], results["replicated"]
+        print(f"mesh {t['mesh']} tuned layouts vs replicated: "
+              f"{t['tokens_per_s']:8.1f} vs {p['tokens_per_s']:8.1f} tok/s "
+              f"| ttft p95 {t['ttft_p95_s']:.2f}s vs {p['ttft_p95_s']:.2f}s")
+    return results
 
 
 # ------------------------------------------------------- pool-pressure sweep
@@ -662,6 +765,7 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
           packing_requests: int = 24, prefix: bool = True,
           prefix_requests: int = 24, sampling: str = "greedy",
           sampled: bool = True, sampled_requests: int = 12,
+          tp: bool = True, tp_requests: int = 12,
           trace_path: str = None) -> dict:
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
@@ -746,6 +850,8 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
             "max_slots": rcfg.max_slots,
             "chunk_width": engine._chunk_width,
             "chunk_segments": engine._chunk_segments,
+            "mesh": engine.mesh_tag,
+            "layouts": _layout_summary(engine.router),
             "requests": requests, "seed": seed,
         }
         write_trace(trace_path, recorder.events, metrics=engine.metrics,
@@ -799,6 +905,12 @@ def bench(requests: int = 32, slots: int = 4, seed: int = 0,
                   "Pallas lanes run in interpret mode on CPU) ---")
         out["lanes"] = lane_breakdown(model, params, mesh, cfg, rcfg,
                                       workload[:lane_requests], verbose=verbose)
+    if tp:
+        if verbose:
+            print("--- tensor-parallel mesh sweep (same workload at mesh "
+                  "1x1/1x2/1x4; tuned layouts vs replicated) ---")
+        out["tp"] = tp_sweep(model, params, cfg, rcfg,
+                             workload[:tp_requests], verbose=verbose)
     return out
 
 
@@ -895,6 +1007,7 @@ def bench_ssm(requests: int = 16, slots: int = 3, seed: int = 0,
             "chunk_width": engine._chunk_width,
             "chunk_segments": engine._chunk_segments,
             "family": "ssm",
+            "mesh": engine.mesh_tag,
             "requests": requests, "seed": seed,
         }
         write_trace(trace_path, recorder.events, metrics=engine.metrics,
@@ -939,7 +1052,7 @@ def csv_row(name: str, value, derived: str = "") -> tuple:
 def expected_csv_names(sampled: bool = True, packing: bool = True,
                        prefix: bool = True, interference: bool = True,
                        pressure: bool = True, lanes: bool = True,
-                       ssm: bool = True) -> list:
+                       ssm: bool = True, tp: bool = True) -> list:
     """The exact, ordered row names run() appends — the pinned schema."""
     names = ["serve_fixed_tok_s", "serve_continuous_tok_s",
              "serve_speedup_x", "serve_chunk_fill_frac"]
@@ -961,6 +1074,9 @@ def expected_csv_names(sampled: bool = True, packing: bool = True,
     if ssm:
         names += ["serve_ssm_fixed_tok_s", "serve_ssm_continuous_tok_s",
                   "serve_ssm_speedup_x", "serve_ssm_preemptions"]
+    if tp:
+        names += [f"serve_tp_mesh{w}_tok_s" for w in TP_WIDTHS]
+        names += ["serve_tp_tuned_tok_s", "serve_tp_replicated_tok_s"]
     return names
 
 
@@ -1031,6 +1147,27 @@ def run(csv_rows):
                             "workload"))
     csv_rows.append(csv_row("serve_ssm_preemptions", sr["preemptions"],
                             "state pool one row short of slots"))
+    # TP sweep rows: a fixed schema whatever the host's device count — a
+    # single-device harness emits 0.0 with a "skipped" derived note, the
+    # CI mesh-smoke job (4 virtual devices) emits real numbers
+    tpr = r.get("tp", {})
+    skipped = (f"skipped: {tpr.get('devices', 1)} host device(s)"
+               if tpr.get("skipped", True) else "")
+    for w in TP_WIDTHS:
+        tr = tpr.get(w)
+        csv_rows.append(csv_row(
+            f"serve_tp_mesh{w}_tok_s",
+            0.0 if tr is None else tr["tokens_per_s"],
+            skipped if tr is None else
+            f"ttft_p95={tr['ttft_p95_s']:.2f} layouts={tr['layouts']}"))
+    for leg in ("tuned", "replicated"):
+        tr = tpr.get(leg)
+        csv_rows.append(csv_row(
+            f"serve_tp_{leg}_tok_s",
+            0.0 if tr is None else tr["tokens_per_s"],
+            skipped if tr is None else
+            f"mesh={tr['mesh']} ttft_p95={tr['ttft_p95_s']:.2f} "
+            f"layouts={tr['layouts']}"))
     got = [row[0] for row in csv_rows[start:]]
     if got != expected_csv_names():
         raise AssertionError(
@@ -1086,6 +1223,15 @@ if __name__ == "__main__":
     ap.add_argument("--sampled-requests", type=int, default=12,
                     help="workload prefix replayed in the sampled "
                          "differential")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="virtual host devices for the CPU backend "
+                         "(applied by repro.platform BEFORE the jax import "
+                         "at the top of this file; the TP sweep needs 4)")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="skip the tensor-parallel mesh sweep")
+    ap.add_argument("--tp-requests", type=int, default=12,
+                    help="workload prefix replayed per mesh width in the "
+                         "TP sweep")
     ap.add_argument("--require-decode-only", action="store_true",
                     help="exit non-zero unless the headline continuous run "
                          "dispatched the decode-only fast path (CI guard)")
@@ -1117,6 +1263,7 @@ if __name__ == "__main__":
                    prefix_requests=args.prefix_requests,
                    sampling=args.sampling, sampled=not args.no_sampled,
                    sampled_requests=args.sampled_requests,
+                   tp=not args.no_tp, tp_requests=args.tp_requests,
                    trace_path=args.trace)
     if args.trace and not result.get("trace_audit_ok", False):
         print("trace audit: FAIL — event trace disagrees with ServeMetrics")

@@ -13,6 +13,13 @@ Run:  PYTHONPATH=src python examples/serve_inference.py [--requests 12]
 import argparse
 import time
 
+# must run before anything imports jax: --devices N asks the CPU backend
+# for N virtual host devices, and the backend latches XLA_FLAGS at the
+# first jax import (see repro.platform)
+from repro import platform
+
+platform.configure_from_argv()
+
 import jax
 import numpy as np
 
@@ -20,7 +27,7 @@ from repro.configs import get_config
 from repro.core.search.tuner import Tuner
 from repro.data import DataConfig, SyntheticLMData
 from repro.distributed.sharding import DEFAULT_RULES
-from repro.launch.mesh import single_device_mesh
+from repro.launch.mesh import single_device_mesh, tp_mesh
 from repro.launch.steps import TrainConfig, jit_train_step
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init
@@ -39,12 +46,23 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--no-plan", action="store_true",
                     help="skip WPK plan tuning (pure XLA dispatch)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="virtual host devices (applied by repro.platform "
+                         "before the jax import above)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-parallel mesh width for SERVING (<= "
+                         "--devices); token streams are byte-identical "
+                         "across widths")
     args = ap.parse_args()
 
     cfg = get_config("qwen3-1.7b").reduced(n_layers=2, d_model=128, d_ff=256,
                                            vocab=211)
     model = build_model(cfg)
+    # warm-up training stays single-device; serving gets its own
+    # (1, tp) mesh — the engine's serve_rules guard every indivisible
+    # axis, and the token streams are byte-identical across widths
     mesh = single_device_mesh()
+    serve_mesh = tp_mesh(args.tp) if args.tp > 1 else mesh
     data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
 
     with mesh:
@@ -70,13 +88,17 @@ def main() -> None:
         plan = build_serve_plan(
             cfg, prefill_len=32, slots=rcfg.max_slots, max_seq=rcfg.max_seq,
             chunk_tokens=rcfg.chunk_width,
-            tuner=Tuner(methods=("random",), random_budget=16))
+            tuner=Tuner(methods=("random",), random_budget=16),
+            model_parallel=args.tp)
         router = PlanRouter(plan)
         print(f"serve plan tuned in {time.perf_counter() - t0:.1f}s: "
               f"{router.describe()}")
 
-    engine = ContinuousEngine(model, params, mesh, DEFAULT_RULES, rcfg,
+    engine = ContinuousEngine(model, params, serve_mesh, DEFAULT_RULES, rcfg,
                               router=router)
+    if args.tp > 1:
+        print(f"serving mesh {engine.mesh_tag} | decode layouts "
+              f"{router.layout_table('decode')}")
     rng = np.random.default_rng(0)
     correct = 0
     prompts = {}

@@ -239,6 +239,94 @@ def xla_time(op: OpDesc, chip: hw.Chip = hw.TPU_V5E) -> float:
     raise ValueError(op.kind)
 
 
+# --------------------------------------------------------------------------
+# Layout (tensor-parallel) pricing — the serve plan's second race axis.
+#
+# A matmul stage may run replicated (every device computes the full GEMM)
+# or model-parallel over `tp` devices.  Which GEMM dim shards, and which
+# collective the layout implies, is a property of the op's ROLE in the
+# block, not of its shape:
+#
+#   column-parallel ('n' shards): the output is already partitioned along
+#     the very dim the NEXT sharded op consumes (qkv -> per-head attention,
+#     mlp_up -> per-column activation) — no collective on the hot path;
+#   row-parallel ('k' shards): each device holds a partial sum of the full
+#     output — one all-reduce per invocation (mlp_down, out_proj close the
+#     Megatron pair their column-parallel partner opened);
+#   lm_head shards the vocab dim and the sampler needs the full
+#     distribution — one all-gather of the logits.
+#
+# Attention itself shards over heads ('h'): per-head programs are
+# independent, the collectives ride the projections around it.
+# --------------------------------------------------------------------------
+
+# role -> (sharded gemm dim, implied collective on the output)
+MATMUL_LAYOUT_ROLES: Dict[str, tuple] = {
+    "qkv_proj": ("n", None),
+    "mlp_up": ("n", None),
+    "mlp_down": ("k", "all_reduce"),
+    "lm_head": ("n", "all_gather"),
+    # ssm family (repro.models.mamba): in_proj/out_proj are the Megatron
+    # pair over the conv/state inner dim
+    "in_proj": ("n", None),
+    "out_proj": ("k", "all_reduce"),
+    "attention": ("h", None),
+}
+
+
+def collective_time(nbytes: float, tp: int, chip: hw.Chip = hw.TPU_V5E,
+                    kind: str = "all_reduce") -> float:
+    """Ring-collective time over the model axis of a `tp`-device mesh.
+
+    Ring all-reduce moves 2*(tp-1)/tp of the buffer per device (reduce-
+    scatter + all-gather phases); all-gather moves (tp-1)/tp.  Bandwidth is
+    the per-axis ICI budget; each phase hop pays a launch."""
+    if tp <= 1:
+        return 0.0
+    bw = chip.ici_link_bw * chip.ici_links_per_axis
+    phases = {"all_reduce": 2.0, "all_gather": 1.0, "reduce_scatter": 1.0}
+    moved = phases[kind] * (tp - 1) / tp * nbytes
+    return moved / bw + (tp - 1) * LAUNCH_OVERHEAD_S
+
+
+def sharded_op_desc(op: OpDesc, role: str, tp: int) -> Optional[OpDesc]:
+    """The per-device OpDesc of `op` under role's model-parallel layout, or
+    None when the sharded dim doesn't divide `tp` (the layout is then not
+    a legal candidate — mirroring `launch.steps.rules_for_shape`)."""
+    if tp <= 1 or role not in MATMUL_LAYOUT_ROLES:
+        return None
+    dim, _ = MATMUL_LAYOUT_ROLES[role]
+    d = op.d
+    if op.kind == "matmul" and dim in ("n", "k"):
+        if d[dim] % tp:
+            return None
+        m, n, k = d["m"], d["n"], d["k"]
+        if dim == "n":
+            n //= tp
+        else:
+            k //= tp
+        return OpDesc.matmul(m, n, k, dtype=op.dtype,
+                             activation=op.activation, label=op.label)
+    if op.kind == "attention" and dim == "h":
+        if d["h"] % tp:
+            return None
+        return OpDesc.attention(d["b"], d["q"], d["kv"], d["h"] // tp,
+                                d["d"], dtype=op.dtype, label=op.label)
+    return None
+
+
+def layout_collective_time(op: OpDesc, role: str, tp: int,
+                           chip: hw.Chip = hw.TPU_V5E) -> float:
+    """Time of the collective the model-parallel layout implies for this
+    op (0.0 for column-parallel roles and attention)."""
+    _, coll = MATMUL_LAYOUT_ROLES[role]
+    if coll is None or tp <= 1:
+        return 0.0
+    m, n, _ = op.gemm_view()
+    out_bytes = m * n * np.dtype(op.dtype).itemsize
+    return collective_time(out_bytes, tp, chip, coll)
+
+
 def xla_elementwise_time(nbytes: int, chip: hw.Chip = hw.TPU_V5E) -> float:
     """Un-fused elementwise op: read + write through HBM + one launch.
     This is the traffic that operator fusion (paper §2.1) eliminates."""

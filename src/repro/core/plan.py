@@ -17,6 +17,14 @@ class OpChoice:
     config: Dict[str, Any]             # tuned schedule config ({} for xla)
     modeled_time_s: float
     candidates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # the layout dimension of the race (tensor-parallel serving): which
+    # sharding this op's weights/activations run under, and the modeled
+    # time of every layout raced.  Plans tuned before the layout axis
+    # existed load as 'replicated' with no candidates — the single-device
+    # semantics they were tuned under.
+    layout: str = "replicated"         # 'replicated' | 'model_parallel'
+    layout_candidates: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -56,7 +64,9 @@ class InferencePlan:
         plan = InferencePlan(d["graph"], d["chip"])
         for k, v in d["choices"].items():
             plan.choices[k] = OpChoice(v["backend"], v["config"],
-                                       v["modeled_time_s"], v.get("candidates", {}))
+                                       v["modeled_time_s"], v.get("candidates", {}),
+                                       v.get("layout", "replicated"),
+                                       v.get("layout_candidates", {}))
         return plan
 
     def choice(self, node_name: str) -> Optional[OpChoice]:

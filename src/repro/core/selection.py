@@ -60,14 +60,44 @@ def op_desc_of(graph: Graph, node: Node, dtype: str = "bfloat16") -> Optional[Op
     return None
 
 
+def _race_backends(op: OpDesc, tuner: Tuner, chip: hw.Chip,
+                   third_party: bool):
+    """Race the vendor (XLA) lane against every applicable tuned Pallas
+    template for ONE op shape; -> (backend, cfg, time, candidates)."""
+    candidates: Dict[str, float] = {}
+    best_backend, best_cfg, best_t = None, {}, float("inf")
+    if third_party:  # the vendor/third-party lane of the race
+        t_xla = costmodel.xla_time(op, chip)
+        candidates["xla"] = t_xla
+        best_backend, best_cfg, best_t = "xla", {}, t_xla
+    for template in templates_for(op):
+        res = tuner.tune(op, template)
+        candidates[template.name] = res.runtime_s
+        if res.runtime_s < best_t:
+            best_backend, best_cfg, best_t = (template.name, res.config,
+                                              res.runtime_s)
+    return best_backend, best_cfg, best_t, candidates
+
+
 def select(
     graph: Graph,
     tuner: Optional[Tuner] = None,
     chip: hw.Chip = hw.TPU_V5E,
     dtype: str = "bfloat16",
     third_party: bool = True,
+    model_parallel: int = 1,
 ) -> InferencePlan:
-    """Build the inference plan for `graph`."""
+    """Build the inference plan for `graph`.
+
+    `model_parallel` > 1 opens the LAYOUT axis of the race: nodes whose
+    stage-qualified role appears in `costmodel.MATMUL_LAYOUT_ROLES` are
+    additionally raced model-parallel over that many devices — the
+    backend race re-run at the per-device shard shape, plus the price of
+    the collective the layout implies (all-reduce for row-parallel roles,
+    logits all-gather for lm_head, none for column-parallel) — and the
+    winning layout lands on the choice's `layout` field next to the
+    backend.  Shard dims that don't divide `model_parallel` keep the
+    replicated layout (no illegal candidate is ever raced)."""
     tuner = tuner or Tuner(chip=chip)
     plan = InferencePlan(graph.name, chip.name)
 
@@ -78,21 +108,24 @@ def select(
         if op is None:
             continue
 
-        candidates: Dict[str, float] = {}
-        best_backend, best_cfg, best_t = None, {}, float("inf")
-
-        if third_party:  # the vendor/third-party lane of the race
-            t_xla = costmodel.xla_time(op, chip)
-            candidates["xla"] = t_xla
-            best_backend, best_cfg, best_t = "xla", {}, t_xla
-
-        for template in templates_for(op):
-            res = tuner.tune(op, template)
-            candidates[template.name] = res.runtime_s
-            if res.runtime_s < best_t:
-                best_backend, best_cfg, best_t = template.name, res.config, res.runtime_s
-
+        best_backend, best_cfg, best_t, candidates = _race_backends(
+            op, tuner, chip, third_party)
         assert best_backend is not None, f"no backend for {node.name}"
-        plan.choices[node.name] = OpChoice(best_backend, best_cfg, best_t, candidates)
+        choice = OpChoice(best_backend, best_cfg, best_t, candidates)
+
+        role = node.name.rsplit(".", 1)[-1]
+        sharded = costmodel.sharded_op_desc(op, role, model_parallel)
+        if sharded is not None:
+            mp_backend, mp_cfg, mp_t, mp_cands = _race_backends(
+                sharded, tuner, chip, third_party)
+            mp_t += costmodel.layout_collective_time(op, role,
+                                                     model_parallel, chip)
+            choice.layout_candidates = {"replicated": best_t,
+                                        "model_parallel": mp_t}
+            if mp_backend is not None and mp_t < best_t:
+                choice = OpChoice(mp_backend, mp_cfg, mp_t, mp_cands,
+                                  layout="model_parallel",
+                                  layout_candidates=choice.layout_candidates)
+        plan.choices[node.name] = choice
 
     return plan

@@ -35,5 +35,22 @@ def single_device_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def tp_mesh(tp: int):
+    """A (1, tp) data x model serving mesh over the FIRST `tp` local
+    devices.  Deliberately a device SUBSET (jax.make_mesh insists on using
+    every device), so one multi-device host process can race tp=1/2/4
+    meshes side by side — the TP bench sweep and the cross-mesh
+    byte-identity differential both depend on that."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if tp > len(devs):
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but the process has {len(devs)}; "
+            "set --devices (repro.platform) before the first jax import")
+    return Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))
+
+
 def mesh_axis_size(mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.shape else 1

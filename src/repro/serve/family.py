@@ -63,7 +63,6 @@ from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -110,8 +109,16 @@ class DecoderFamilyAdapter:
                  router: PlanRouter):
         mcfg = model.cfg
         self.kv_cfg = cfg.kv_config()
+        # the pools are BORN in their serving sharding (blocks replicated,
+        # kv_heads over the model axis): the unified program's donated pool
+        # arguments then carry the same sharding on the very first step as
+        # on every later one, so exactly one executable ever builds — a
+        # replicated-first-call would compile a second, layout-shifted copy
+        pool_shard = paged_pool_sharding(model, mesh,
+                                         prune_for_mesh(rules, mesh))
         self.cache = PagedKVCache(self.kv_cfg, mcfg.n_layers, mcfg.n_kv_heads,
-                                  mcfg.hd, jnp.dtype(mcfg.dtype))
+                                  mcfg.hd, jnp.dtype(mcfg.dtype),
+                                  sharding=pool_shard)
         # fixed prefill-lane geometry: the step's prompt-token budget and
         # the packed-segment descriptor height, both compiled in.  The
         # height is the EFFECTIVE packing width — cfg.chunk_segments
@@ -157,15 +164,6 @@ class DecoderFamilyAdapter:
         # copy-on-write block duplication (prefix sharing); jit is lazy, so
         # this compiles at the FIRST shared-block write, never on admission
         self._cow = jit_cow_block(model, mesh, rules)
-        # commit the fresh pools to their serving sharding up front: the
-        # unified program's donated pool arguments then carry the SAME
-        # sharding on the very first step as on every later one, so exactly
-        # one executable ever builds (an uncommitted first call would
-        # compile a second, layout-shifted copy of the program)
-        pool_shard = paged_pool_sharding(model, mesh,
-                                         prune_for_mesh(rules, mesh))
-        self.cache.k = jax.device_put(self.cache.k, pool_shard)
-        self.cache.v = jax.device_put(self.cache.v, pool_shard)
 
     # ------------------------------------------------------------- capacity
     @property
@@ -342,7 +340,13 @@ class SSMFamilyAdapter:
         # even though the SSD recurrence holds the chunk lane at width 1
         self.resume_segments = max(1, cfg.chunk_segments)
         self.state_cfg = cfg.state_config()
-        self.cache = SlotStateCache.for_model(self.state_cfg, mcfg)
+        # state pools born in their serving sharding (rows replicated,
+        # feature dims over the model axis) — same one-executable donation
+        # argument as the paged pools above
+        self.cache = SlotStateCache.for_model(
+            self.state_cfg, mcfg,
+            shardings=slot_state_shardings(model, mesh,
+                                           prune_for_mesh(rules, mesh)))
         chunk_stage, decode_stage = "ssm_prefill_chunk", "ssm_decode"
         assert chunk_stage in serve_stages(self.family)
         self._unified = jit_ssm_unified_step(
@@ -355,10 +359,6 @@ class SSMFamilyAdapter:
             decode_matmul_table=router.matmul_table(decode_stage),
             interpret=cfg.interpret)
         self._commit = jit_ssm_commit_state(model, mesh, rules)
-        conv_shard, ssm_shard = slot_state_shardings(
-            model, mesh, prune_for_mesh(rules, mesh))
-        self.cache.conv = jax.device_put(self.cache.conv, conv_shard)
-        self.cache.ssm = jax.device_put(self.cache.ssm, ssm_shard)
 
     # ------------------------------------------------------------- capacity
     @property

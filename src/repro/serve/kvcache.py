@@ -347,12 +347,21 @@ class PagedKVCache:
     """Device-side paged K/V pools plus the allocator."""
 
     def __init__(self, cfg: KVCacheConfig, n_layers: int, n_kv_heads: int,
-                 head_dim: int, dtype=jnp.bfloat16):
+                 head_dim: int, dtype=jnp.bfloat16, sharding=None):
         self.cfg = cfg
         self.alloc = BlockAllocator(cfg)
         shape = (n_layers, cfg.num_blocks, cfg.block_size, n_kv_heads, head_dim)
-        self.k = jnp.zeros(shape, dtype)
-        self.v = jnp.zeros(shape, dtype)
+        # `sharding` (a NamedSharding) creates the pools DIRECTLY in their
+        # serving layout — blocks replicated, kv_heads over the model axis
+        # — so the donated pool arguments carry the same sharding on the
+        # first step as on every later one and exactly one executable per
+        # program ever builds (no layout-shifting device_put afterwards).
+        if sharding is not None:
+            self.k = jnp.zeros(shape, dtype, device=sharding)
+            self.v = jnp.zeros(shape, dtype, device=sharding)
+        else:
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
         # rid -> (k_host, v_host) of shape (L, n_blocks, bs, Hkv, hd):
         # preempted requests' KV lives here, off-device, until swap-in
         self._swapped: Dict[int, tuple] = {}

@@ -205,15 +205,23 @@ def build_serve_plan(cfg: ModelConfig, *, prefill_len: int, slots: int,
                      chip: hw.Chip = hw.TPU_V5E,
                      tuner: Optional[Tuner] = None,
                      dtype: str = "bfloat16",
-                     family: str = "decoder") -> InferencePlan:
-    """Tune the serve graph and return its stage-qualified InferencePlan."""
+                     family: str = "decoder",
+                     model_parallel: int = 1) -> InferencePlan:
+    """Tune the serve graph and return its stage-qualified InferencePlan.
+
+    `model_parallel` > 1 additionally races each stage matmul's LAYOUT
+    (replicated vs model-parallel over that many devices, collectives
+    priced by `core.costmodel`) — the tuned plan then carries a per-stage
+    layout table `PlanRouter.serve_rules` folds into the `ShardingRules`
+    the step builders compile under."""
     # dtype forwarded so the graph's tensors carry the width the plan is
     # tuned for (dtype-sensitive validation/cost modelling sees bf16, not a
     # float32 default that never matches the plan).
     g = build_serve_graph(cfg, prefill_len=prefill_len, slots=slots,
                           max_seq=max_seq, chunk_tokens=chunk_tokens,
                           dtype=dtype, family=family)
-    return select(g, tuner=tuner, chip=chip, dtype=dtype)
+    return select(g, tuner=tuner, chip=chip, dtype=dtype,
+                  model_parallel=model_parallel)
 
 
 class PlanRouter:
@@ -290,6 +298,105 @@ class PlanRouter:
         from repro.kernels.dispatch import MATMUL_ROLES
         roles = SSM_MATMUL_ROLES if stage.startswith("ssm_") else MATMUL_ROLES
         return {role: self.matmul_config(stage, role) for role in roles}
+
+    # -------------------------------------------------------------- layouts
+    def layout(self, stage: str, which: str) -> str:
+        """The plan's layout verdict for one stage op: 'replicated' |
+        'model_parallel'.  No plan / no choice / pre-layout plans answer
+        'replicated' — the single-device semantics they were tuned under."""
+        c = self._lookup(stage, which)
+        if c is None:
+            return "replicated"
+        return getattr(c, "layout", "replicated")
+
+    def layout_table(self, stage: str) -> Dict[str, str]:
+        """Every stage op's layout verdict keyed by role (matmul roles plus
+        'attention' for decoder stages) — stamped into trace metadata and
+        folded into `serve_rules`."""
+        from repro.kernels.dispatch import MATMUL_ROLES
+        if stage.startswith("ssm_"):
+            roles = SSM_MATMUL_ROLES
+        else:
+            roles = tuple(MATMUL_ROLES) + ("attention",)
+        return {role: self.layout(stage, role) for role in roles}
+
+    def _raced_replicated(self, stages, roles) -> bool:
+        """True when any raced stage choice EXPLICITLY chose the replicated
+        layout — the demotion trigger for the roles' logical axes.  Choices
+        that never raced layouts (old plans, indivisible shard dims) don't
+        demote: the base rules' divisibility guards already govern them."""
+        for s in stages:
+            for r in roles:
+                c = self._lookup(s, r)
+                if c is None:
+                    continue
+                if (getattr(c, "layout_candidates", {})
+                        and getattr(c, "layout", "replicated")
+                        == "replicated"):
+                    return True
+        return False
+
+    def serve_rules(self, base_rules, mesh, cfg: ModelConfig,
+                    family: str = "decoder"):
+        """Fold the plan's per-stage layout verdicts into the
+        `ShardingRules` the step builders compile under.
+
+        Monotone by construction — this only ever NARROWS `base_rules`
+        (demotes logical axes to replicated), never promotes, so the base
+        table is the maximal layout and token streams stay byte-identical
+        across every mesh size.  Three tiers:
+
+          * model axis size <= 1: `base_rules` returned untouched — the
+            single-device path is exactly the pre-mesh engine;
+          * no plan: `base_rules` with the divisibility guards of
+            `launch.steps.rules_for_shape` applied (full model-parallel
+            wherever legal);
+          * tuned plan: guards plus demotion of every role group whose
+            serving-stage choices explicitly raced layouts and chose
+            replicated — coupled axes (mlp_up/mlp_down share 'ffn';
+            qkv/attention share the head axes; in_proj/out_proj share the
+            conv/state dims) demote together, so one `ShardingRules`
+            always exists that honours every verdict."""
+        m = mesh.shape.get("model", 1)
+        if m <= 1:
+            return base_rules
+        rules = base_rules
+        # divisibility guards: each sharded dim must divide the model axis
+        if family == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            conv_dim = d_in + 2 * cfg.ssm_state
+            if nh % m:
+                rules = rules.replace(ssm_heads=None)
+            if conv_dim % m:
+                rules = rules.replace(conv_dim=None)
+        else:
+            if cfg.n_heads and cfg.n_heads % m:
+                rules = rules.replace(heads=None)
+            if cfg.n_kv_heads and cfg.n_kv_heads % m:
+                rules = rules.replace(kv_heads=None)
+            if cfg.d_ff and cfg.d_ff % m:
+                rules = rules.replace(ffn=None)
+        if cfg.vocab % m:
+            rules = rules.replace(vocab=None)
+            if cfg.d_model % m == 0:
+                rules = rules.replace(embed_vec="model")
+        if self.plan is None:
+            return rules
+        # the stages the engine actually dispatches through ('prefill' is
+        # the whole-prompt shape family benches tune, not a serve stage)
+        stages = tuple(s for s in serve_stages(family) if s != "prefill")
+        if family == "ssm":
+            if self._raced_replicated(stages, ("in_proj", "out_proj")):
+                rules = rules.replace(conv_dim=None, ssm_heads=None)
+        else:
+            if self._raced_replicated(stages, ("qkv_proj", "attention")):
+                rules = rules.replace(heads=None, kv_heads=None)
+            if self._raced_replicated(stages, ("mlp_up", "mlp_down")):
+                rules = rules.replace(ffn=None)
+        if self._raced_replicated(stages, ("lm_head",)):
+            rules = rules.replace(vocab=None, embed_vec=None)
+        return rules
 
     def describe(self) -> Dict[str, str]:
         """Stage-qualified op -> chosen backend (for logs and benches)."""

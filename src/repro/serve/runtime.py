@@ -105,9 +105,11 @@ import dataclasses
 import time
 from typing import Callable, List, Optional
 
+import jax
 import numpy as np
 
-from repro.distributed.sharding import ShardingRules
+from repro.distributed.sharding import (ShardingRules, params_shardings,
+                                        prune_for_mesh)
 from repro.serve.family import resolve_family_adapter
 from repro.serve.kvcache import KVCacheConfig
 from repro.serve.metrics import ServeMetrics
@@ -206,12 +208,15 @@ class ContinuousEngine:
                  now_fn: Optional[Callable[[], float]] = None,
                  trace: Optional[TraceRecorder] = None):
         self.model = model
-        self.params = params
         self.mesh = mesh
-        self.rules = rules
         self.cfg = cfg
         self.router = router or PlanRouter(None)
         self.now_fn = now_fn or time.perf_counter
+        # the mesh tag stamped on step trace events and run metadata:
+        # "<data>x<model>" ("1x1" on a single device) — the traceview audit
+        # one-checks it the way it one-checks the family tag
+        self.mesh_tag = "{}x{}".format(mesh.shape.get("data", 1),
+                                       mesh.shape.get("model", 1))
         # structured event tracing (`repro.serve.trace`): the recorder is
         # threaded through the scheduler and the family's allocator so
         # every lifecycle / pool / step event lands in ONE stream on the
@@ -222,9 +227,24 @@ class ContinuousEngine:
         if self.trace.enabled and self.trace.now_fn is None:
             self.trace.now_fn = self.now_fn
         # the family seam: raises TypeError for families with neither a
-        # paged nor a slot-pooled serving path
-        self.adapter = resolve_family_adapter(model)(
-            model, mesh, rules, cfg, self.router)
+        # paged nor a slot-pooled serving path.  Before the adapter builds
+        # its step programs, the router folds the plan's per-stage layout
+        # verdicts (and the mesh's divisibility guards) into the rules —
+        # on a single-device mesh this returns `rules` untouched, so the
+        # tuned layout table reaches the step builders exactly when a
+        # model axis exists to shard over.
+        adapter_cls = resolve_family_adapter(model)
+        self.rules = self.router.serve_rules(rules, mesh, model.cfg,
+                                             adapter_cls.family)
+        # commit the params onto THIS mesh in the step programs' own layout
+        # before any program runs: params trained (or loaded) on a
+        # different mesh reshard once here, and the first step sees exactly
+        # the in_shardings it compiled for — admission compiles nothing,
+        # and no layout-shifted second executable can ever build
+        self.params = jax.device_put(
+            params, params_shardings(mesh, prune_for_mesh(self.rules, mesh),
+                                     model.logical_axes()))
+        self.adapter = adapter_cls(model, mesh, self.rules, cfg, self.router)
         self.family = self.adapter.family
         self.adapter.alloc.trace = self.trace
         self.scheduler = ContinuousScheduler(
@@ -468,7 +488,7 @@ class ContinuousEngine:
                 trace.emit("chunk_scheduled", t=now, rid=req.rid,
                            start=start, n=n)
             trace.emit("step_begin", t=now, step=step_idx, kind=kind,
-                       family=self.family,
+                       family=self.family, mesh=self.mesh_tag,
                        lane_width=self._chunk_width if chunks else 0,
                        segments=len(chunks),
                        chunk_tokens=sum(n for _, _, n in chunks),
@@ -498,7 +518,7 @@ class ContinuousEngine:
         now = self.now_fn()
         if trace.enabled:
             trace.emit("step_end", t=now, step=step_idx, kind=kind,
-                       family=self.family,
+                       family=self.family, mesh=self.mesh_tag,
                        lane_width=self._chunk_width if chunks else 0,
                        segments=len(chunks),
                        chunk_tokens=sum(n for _, _, n in chunks),

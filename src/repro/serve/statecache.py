@@ -159,23 +159,36 @@ class SlotStateCache:
     serving bitwise comparable to its drain."""
 
     def __init__(self, cfg: StateCacheConfig, n_layers: int, conv_width: int,
-                 conv_dim: int, nheads: int, head_dim: int, d_state: int):
+                 conv_dim: int, nheads: int, head_dim: int, d_state: int,
+                 shardings=None):
         self.cfg = cfg
         self.alloc = SlotAllocator(cfg)
-        self.conv = jnp.zeros(
-            (n_layers, cfg.num_slots, conv_width - 1, conv_dim), jnp.float32)
-        self.ssm = jnp.zeros(
-            (n_layers, cfg.num_slots, nheads, head_dim, d_state), jnp.float32)
+        conv_shape = (n_layers, cfg.num_slots, conv_width - 1, conv_dim)
+        ssm_shape = (n_layers, cfg.num_slots, nheads, head_dim, d_state)
+        # `shardings` — a (conv NamedSharding, ssm NamedSharding) pair —
+        # creates the pools DIRECTLY in their serving layout (rows
+        # replicated, feature dims over the model axis), so the donated
+        # pool arguments never layout-shift between the first step and the
+        # rest: exactly one executable per program.
+        if shardings is not None:
+            conv_shard, ssm_shard = shardings
+            self.conv = jnp.zeros(conv_shape, jnp.float32, device=conv_shard)
+            self.ssm = jnp.zeros(ssm_shape, jnp.float32, device=ssm_shard)
+        else:
+            self.conv = jnp.zeros(conv_shape, jnp.float32)
+            self.ssm = jnp.zeros(ssm_shape, jnp.float32)
         # rid -> (conv_host, ssm_host): preempted requests' state lives
         # here, off-device, until swap-in
         self._swapped: Dict[int, tuple] = {}
 
     @classmethod
-    def for_model(cls, cfg: StateCacheConfig, model_cfg) -> "SlotStateCache":
+    def for_model(cls, cfg: StateCacheConfig, model_cfg,
+                  shardings=None) -> "SlotStateCache":
         from repro.models.mamba import _dims
         d_in, nh, conv_dim = _dims(model_cfg)
         return cls(cfg, model_cfg.n_layers, model_cfg.conv_width, conv_dim,
-                   nh, model_cfg.ssm_head_dim, model_cfg.ssm_state)
+                   nh, model_cfg.ssm_head_dim, model_cfg.ssm_state,
+                   shardings=shardings)
 
     # ------------------------------------------------------------- swapping
     def is_swapped(self, rid: int) -> bool:

@@ -445,6 +445,18 @@ def audit(events: List[TraceEvent], metrics=None,
             violations.append(f"metrics family {mfam!r} not among event "
                               f"families {sorted(fams)}")
 
+    # mesh consistency: one engine runs one mesh for its whole life; absent
+    # tags are pre-mesh traces, i.e. a single device ("<data>x<model>")
+    meshes = {e.fields.get("mesh", "1x1") for e in events
+              if e.name in ("step_begin", "step_end")}
+    if len(meshes) > 1:
+        violations.append(f"mixed meshes in one trace: {sorted(meshes)}")
+    checks["mesh"] = sorted(meshes)[0] if meshes else "1x1"
+    md_mesh = metadata.get("mesh")
+    if md_mesh is not None and meshes and md_mesh not in meshes:
+        violations.append(f"metadata mesh {md_mesh!r} not among step-event "
+                          f"meshes {sorted(meshes)}")
+
     finished = [x for x in lcs.values() if x.finish_t is not None]
     if metrics is not None:
         _match_samples("ttft", [x.ttft_s for x in finished

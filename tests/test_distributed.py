@@ -1,6 +1,7 @@
 """Sharding-rule logic + an in-subprocess 8-device mini dry-run (the only
 place outside launch/dryrun.py that forces host devices)."""
 
+import dataclasses
 import json
 import subprocess
 import sys
@@ -30,6 +31,53 @@ def test_prune_for_mesh_drops_missing_axes():
     mesh = single_device_mesh()  # data, model only
     r = prune_for_mesh(DEFAULT_RULES, mesh)
     assert r.lookup("batch") == "data"  # ('pod','data') -> 'data'
+
+
+def test_prune_for_mesh_tuple_axes():
+    """Tuple-valued rules prune element-wise: a surviving pair stays a
+    tuple, a single survivor collapses to a bare axis, none -> None."""
+    class PodDataMesh:
+        shape = {"pod": 2, "data": 4}
+
+    class ModelOnlyMesh:
+        shape = {"model": 2}
+
+    r = prune_for_mesh(DEFAULT_RULES, PodDataMesh())
+    assert r.lookup("batch") == ("pod", "data")   # both present: unchanged
+    assert r.lookup("heads") is None              # 'model' absent
+
+    r = prune_for_mesh(DEFAULT_RULES, ModelOnlyMesh())
+    assert r.lookup("batch") is None              # neither tuple member
+    assert r.lookup("heads") == "model"
+    assert r.lookup("zero") is None               # 'data' absent
+    assert r.lookup("seq") is None                # None stays None
+
+    wide = DEFAULT_RULES.replace(batch=("pod", "data", "model"))
+    r = prune_for_mesh(wide, PodDataMesh())
+    assert r.lookup("batch") == ("pod", "data")   # multi-survivor tuple
+
+
+def test_replace_round_trips_and_preserves_table():
+    r = DEFAULT_RULES.replace(ffn=None, vocab=None, batch="data")
+    back = r.replace(ffn="model", vocab="model", batch=("pod", "data"))
+    assert back == DEFAULT_RULES          # frozen dataclass value equality
+    assert dict(back.rules) == dict(DEFAULT_RULES.rules)
+    # replace never reorders or drops axes — the table stays congruent
+    assert [k for k, _ in r.rules] == [k for k, _ in DEFAULT_RULES.rules]
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.rules = ()                      # frozen: no in-place mutation
+
+
+def test_logical_to_spec_unknown_axis_raises():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import logical_to_spec
+
+    assert logical_to_spec(DEFAULT_RULES, ("batch", None, "heads")) == \
+        P(("pod", "data"), None, "model")
+    with pytest.raises(KeyError, match="made_up_axis"):
+        logical_to_spec(DEFAULT_RULES, ("batch", "made_up_axis"))
+    # None entries are legal and map to replicated dims, even trailing
+    assert logical_to_spec(DEFAULT_RULES, (None, None)) == P(None, None)
 
 
 def test_rules_for_shape_divisibility_fallbacks():

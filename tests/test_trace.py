@@ -162,10 +162,17 @@ def test_bench_serving_csv_schema_pinned():
         "serve_ssm_continuous_tok_s",
         "serve_ssm_speedup_x",
         "serve_ssm_preemptions",
+        "serve_tp_mesh1_tok_s",
+        "serve_tp_mesh2_tok_s",
+        "serve_tp_mesh4_tok_s",
+        "serve_tp_tuned_tok_s",
+        "serve_tp_replicated_tok_s",
     ]
     # sections the smoke run skips drop their rows, never reorder the rest
-    assert bs.expected_csv_names(pressure=False, lanes=False, ssm=False) == \
-        bs.expected_csv_names()[:12]
+    assert bs.expected_csv_names(pressure=False, lanes=False, ssm=False,
+                                 tp=False) == bs.expected_csv_names()[:12]
+    assert bs.expected_csv_names(tp=False) == \
+        [n for n in bs.expected_csv_names() if "serve_tp_" not in n]
     assert bs.expected_csv_names(sampled=False) == \
         [n for n in bs.expected_csv_names() if "sampled" not in n]
     assert bs.expected_csv_names(prefix=False) == \
